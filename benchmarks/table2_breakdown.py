@@ -1,0 +1,54 @@
+"""Table 2 analogue: end-to-end pipeline time breakdown — partitioning,
+partition load/save, training-data load, and train time, plus the
+per-stage busy/starved/backpressured breakdown of the async mini-batch
+pipeline (what the paper's Fig. 7 stages actually cost)."""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from .common import csv_line, make_trainer, small_cfg
+from repro.checkpoint import save_kvstore, load_kvstore
+from repro.graph import get_dataset
+
+
+def run(scale=12, epochs=2):
+    t0 = time.perf_counter()
+    ds = get_dataset("product-sim", scale=scale)
+    t_load = time.perf_counter() - t0
+
+    cfg = small_cfg(in_dim=ds.feats.shape[1])
+    tr = make_trainer(ds, cfg)           # partitions inside
+    t_part = tr.partition_time_s
+
+    with tempfile.TemporaryDirectory() as tmp:
+        t0 = time.perf_counter()
+        save_kvstore(tr.store, tmp)
+        load_kvstore(tr.store, tmp)
+        t_ckpt = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for e in range(epochs):
+        tr.train_epoch(e)
+    t_train = time.perf_counter() - t0
+    stage_stats = tr.pipelines[0].stats_report()
+    tr.stop()
+
+    csv_line("table2/load_data", t_load * 1e6)
+    csv_line("table2/partition", t_part * 1e6)
+    csv_line("table2/save_load_partition", t_ckpt * 1e6)
+    csv_line("table2/train", t_train * 1e6, f"epochs={epochs}")
+    for name, st in stage_stats.items():
+        csv_line(f"table2/stage/{name}",
+                 st["busy_s"] * 1e6 / max(st["items"], 1),
+                 f"items={st['items']};starved_s={st['wait_in_s']:.3f};"
+                 f"backpressure_s={st['wait_out_s']:.3f}")
+    return dict(load=t_load, partition=t_part, ckpt=t_ckpt, train=t_train,
+                stages=stage_stats)
+
+
+if __name__ == "__main__":
+    run()

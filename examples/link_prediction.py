@@ -1,0 +1,92 @@
+"""Link prediction with DistDGLv2-style mini-batches (the paper's second
+task, §6: "for link prediction, we may use all edges to train a model").
+
+Edge mini-batches: sample positive edges uniformly, gather both endpoints'
+ego-networks through the distributed sampler, score with dot products
+against uniform negatives, and update through synchronous SGD.
+
+Run:  PYTHONPATH=src python examples/link_prediction.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kvstore import DistKVStore, PartitionPolicy
+from repro.core.partition import hierarchical_partition
+from repro.core.sampler import DistributedSampler
+from repro.graph import get_dataset, to_coo
+from repro.models.gnn import GNNConfig, apply_gnn, init_gnn, lp_loss
+from repro.optim import adamw_init, adamw_update
+
+NEGS = 4
+
+
+def main(scale=11, steps=60, batch_edges=48, seed=0):
+    ds = get_dataset("product-sim", scale=scale)
+    hp = hierarchical_partition(ds.graph, 2, 1, split_mask=ds.split_mask,
+                                seed=seed)
+    book = hp.book
+    feats_new = ds.feats[book.new2old_node]
+    store = DistKVStore({"node": PartitionPolicy("node", book.node_offsets)})
+    store.init_data("feat", feats_new.shape[1:], np.float32, "node",
+                    full_array=feats_new)
+    client = store.client(0)
+
+    src_old, dst_old = to_coo(ds.graph)
+    e_src = book.old2new_node[src_old]
+    e_dst = book.old2new_node[dst_old]
+    rng = np.random.default_rng(seed)
+
+    # 2-layer GraphSAGE encoder (paper's LP setup: 2 layers, fanout 25/15)
+    cfg = GNNConfig(arch="graphsage", in_dim=ds.feats.shape[1],
+                    hidden_dim=64, num_classes=64,   # output = embedding dim
+                    fanouts=[15, 10], batch_size=2 * batch_edges)
+    sampler = DistributedSampler(book, hp.partitions, cfg.fanouts,
+                                 cfg.batch_size, machine=0, seed=seed)
+    params = init_gnn(cfg, jax.random.key(seed))
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, batch, pos_u, pos_v, neg_v, pair_mask):
+        def loss_fn(p):
+            h = apply_gnn(cfg, p, batch)       # (batch, emb)
+            return lp_loss(h, pos_u, pos_v, neg_v, pair_mask)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adamw_update(params, grads, opt, lr=3e-3)
+        return params, opt, loss
+
+    losses = []
+    n = ds.graph.num_nodes
+    for it in range(steps):
+        eid = rng.integers(0, len(e_src), size=batch_edges)
+        u, v = e_src[eid], e_dst[eid]
+        seeds = np.concatenate([u, v])
+        # pad/dedup: seeds may repeat; sampler tolerates duplicates
+        mb = sampler.sample(seeds[:cfg.batch_size])
+        mb.input_feats = client.pull("feat", mb.input_gids)
+        batch = dict(input_feats=mb.input_feats, labels=None,
+                     seed_mask=mb.seed_mask,
+                     blocks=[dict(edge_src=b.edge_src, edge_dst=b.edge_dst,
+                                  edge_mask=b.edge_mask,
+                                  edge_types=b.edge_types)
+                             for b in mb.blocks])
+        pos_u = np.arange(batch_edges, dtype=np.int32)
+        pos_v = np.arange(batch_edges, 2 * batch_edges, dtype=np.int32)
+        neg_v = rng.integers(0, 2 * batch_edges,
+                             size=(batch_edges, NEGS)).astype(np.int32)
+        pmask = np.ones(batch_edges, bool)
+        params, opt, loss = step(params, opt, batch, pos_u, pos_v, neg_v,
+                                 pmask)
+        losses.append(float(loss))
+        if (it + 1) % 15 == 0:
+            print(f"step {it+1}: loss={np.mean(losses[-15:]):.4f}")
+    assert losses[-1] < losses[0], "link prediction failed to learn"
+    print("link prediction learned: "
+          f"{losses[0]:.3f} -> {np.mean(losses[-10:]):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: the full DistDGLv2 stack in ~60 lines.
+
+Partitions a synthetic power-law graph for a simulated 2-machine x 2-GPU
+cluster, stands up the distributed KVStore, splits the training set with
+the owner-compute rule, and trains GraphSAGE through the asynchronous
+mini-batch pipeline with synchronous SGD across all 4 trainers.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.graph import get_dataset
+from repro.models.gnn import GNNConfig
+from repro.training import DistGNNTrainer, TrainJobConfig
+from repro.core.kvstore import NetworkModel
+
+
+def main():
+    # a ~4k-node power-law graph standing in for ogbn-products
+    ds = get_dataset("product-sim", scale=12)
+    model = GNNConfig(arch="graphsage", in_dim=ds.feats.shape[1],
+                      hidden_dim=128, num_classes=ds.num_classes,
+                      fanouts=[10, 5], batch_size=32)
+    job = TrainJobConfig(
+        num_machines=2, trainers_per_machine=2,
+        partition_method="metis",     # multi-constraint min-edge-cut (§5.3)
+        use_level2=True,              # per-trainer seed clustering
+        sync=False, non_stop=True,    # the full async pipeline (§5.5)
+        network=NetworkModel(sleep=True),   # honest wall-clock remote costs
+    )
+    trainer = DistGNNTrainer(ds, model, job)
+    print(f"{trainer.num_trainers} trainers | "
+          f"{trainer.batches_per_epoch} batches/epoch | "
+          f"seed locality {trainer.locality['mean_local_frac']:.0%}")
+    for epoch in range(5):
+        m = trainer.train_epoch(epoch)
+        print(f"epoch {epoch}: loss={m['loss']:.3f} acc={m['acc']:.2f} "
+              f"({m['time_s']:.2f}s)")
+    print(f"val acc: {trainer.evaluate(ds.val_nids):.3f}")
+    print("sampling stats:", trainer.sampling_stats())
+    trainer.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Batched serving example: prefill + streaming decode with ring-buffer KV
+cache, across three architecture families (dense / SSM / hybrid) to show
+the serve path is family-generic.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.models.lm import init_params, make_decode_step, make_prefill_step
+
+
+def serve(arch, batch=4, prompt_len=32, gen=16):
+    cfg = smoke_variant(get_config(arch))
+    rng = np.random.default_rng(0)
+    params = init_params(cfg, jax.random.key(0))
+    cache_len = prompt_len + gen + 8
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                            (batch, prompt_len)))}
+    if cfg.arch_type == "vlm":
+        b["image_embeds"] = jnp.asarray(rng.standard_normal(
+            (batch, cfg.num_image_tokens, cfg.d_model)), jnp.float32)
+        cache_len += cfg.num_image_tokens
+    if cfg.arch_type == "audio":
+        b["encoder_embeds"] = jnp.asarray(rng.standard_normal(
+            (batch, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+
+    prefill = jax.jit(make_prefill_step(cfg, cache_len))
+    decode = jax.jit(make_decode_step(cfg))
+    logits, cache = prefill(params, b)
+    tok = logits[:, :cfg.vocab_size].argmax(-1)[:, None].astype(jnp.int32)
+    t0 = time.time()
+    toks = [tok]
+    for _ in range(gen - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = logits[:, :cfg.vocab_size].argmax(-1)[:, None].astype(jnp.int32)
+        toks.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    seq = np.concatenate([np.asarray(t) for t in toks], axis=1)
+    print(f"{arch:22s} [{cfg.arch_type:6s}] {batch}x{gen} tokens "
+          f"in {dt:.2f}s -> {seq[0][:10].tolist()}")
+
+
+def main():
+    for arch in ("qwen2-0.5b", "mamba2-2.7b", "zamba2-7b"):
+        serve(arch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""End-to-end driver: train a ~100M-parameter qwen2-family model for a few
+hundred steps through the async token pipeline (DistDGLv2's pipeline
+transferred to the LM data path), with checkpointing.
+
+Run:  PYTHONPATH=src python examples/train_100m_lm.py [--steps 300]
+(~100M params is what fits a few-hundred-step budget on this CPU host;
+the same driver scales to the full configs on a pod via repro.launch.train.)
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import save_pytree, load_pytree
+from repro.configs import get_config
+from repro.data import TokenStream
+from repro.models.lm import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    # ~100M-param member of the qwen2 family (same block structure as the
+    # assigned qwen2-0.5b config, scaled down: 8L, d=512, vocab 32k)
+    cfg = dataclasses.replace(
+        get_config("qwen2-0.5b"), name="qwen2-100m",
+        num_layers=8, d_model=512, num_heads=8, num_kv_heads=2, head_dim=64,
+        d_ff=2048, vocab_size=32000, remat=False, dtype="float32",
+        attn_chunk=128, fsdp=False)
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name}  ~{n_params/1e6:.0f}M params")
+
+    step = jax.jit(make_train_step(cfg, lr=1e-3))
+    params, opt = init_train_state(cfg, seed=0)
+    stream = TokenStream(vocab=cfg.vocab_size, batch=args.batch,
+                         seq=args.seq, cfg=cfg, seed=0)
+
+    losses, t0 = [], time.time()
+    for i, batch in enumerate(stream):
+        if i >= args.steps:
+            break
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+        if (i + 1) % 25 == 0:
+            tput = (i + 1) * args.batch * args.seq / (time.time() - t0)
+            print(f"step {i+1:4d}  loss={np.mean(losses[-25:]):.4f}  "
+                  f"{tput:.0f} tok/s")
+    stream.stop()
+    assert losses[-1] < losses[0] * 0.8, "did not learn"
+
+    save_pytree(params, args.ckpt)
+    params2 = load_pytree(params, args.ckpt)
+    flat_a = jax.tree.leaves(params)
+    flat_b = jax.tree.leaves(params2)
+    assert all(np.allclose(a, b) for a, b in zip(flat_a, flat_b))
+    print(f"checkpoint round-trip OK -> {args.ckpt}")
+    print(f"final loss {np.mean(losses[-20:]):.4f} "
+          f"(start {np.mean(losses[:20]):.4f})")
+
+
+if __name__ == "__main__":
+    main()

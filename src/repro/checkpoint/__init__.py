@@ -1,0 +1,3 @@
+from .checkpoint import load_pytree, save_pytree, save_kvstore, load_kvstore
+
+__all__ = ["load_pytree", "save_pytree", "save_kvstore", "load_kvstore"]

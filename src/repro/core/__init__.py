@@ -1,0 +1,5 @@
+"""DistDGLv2's core contribution, reimplemented for JAX/TPU clusters:
+hierarchical multi-constraint partitioning, distributed KVStore, distributed
+owner-compute neighbor sampling, and the asynchronous mini-batch pipeline.
+"""
+from . import kvstore, partition, pipeline, sampler  # noqa: F401

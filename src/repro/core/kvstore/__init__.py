@@ -1,0 +1,8 @@
+from .transport import NetworkModel, Transport
+from .store import DistKVStore, KVClient, KVServer, PartitionPolicy
+from .embedding import DistEmbedding, SparseAdamConfig
+
+__all__ = [
+    "NetworkModel", "Transport", "DistKVStore", "KVClient", "KVServer",
+    "PartitionPolicy", "DistEmbedding", "SparseAdamConfig",
+]

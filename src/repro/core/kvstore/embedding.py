@@ -1,0 +1,89 @@
+"""Distributed sparse (learnable) embeddings (§3.1 "sparse parameters",
+§5.4, Fig. 4's "sparse emb update" arrow).
+
+Embedding rows live in the KVStore next to the features; a mini-batch pulls
+only the rows it touches, and the trainer pushes *row-sparse gradients*
+back, where the owning server applies a row-wise Adam update. Dense model
+parameters never flow through here — they take the all-reduce path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .store import DistKVStore, KVClient
+
+
+@dataclasses.dataclass
+class SparseAdamConfig:
+    lr: float = 1e-2
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+
+class DistEmbedding:
+    """num x dim learnable table, sharded by a node partition policy."""
+
+    def __init__(self, store: DistKVStore, name: str, num: int, dim: int,
+                 policy_name: str, *, seed: int = 0,
+                 optim: Optional[SparseAdamConfig] = None,
+                 dtype=np.float32):
+        pol = store.policies[policy_name]
+        assert pol.total == num, (pol.total, num)
+        self.store = store
+        self.name = name
+        self.dim = dim
+        self.optim = optim or SparseAdamConfig()
+        rng = np.random.default_rng(seed)
+        scale = 1.0 / np.sqrt(dim)
+        store.init_data(name, (dim,), dtype, policy_name,
+                        init=lambda s: rng.standard_normal(s) * scale)
+        store.init_data(name + "__m", (dim,), np.float32, policy_name)
+        store.init_data(name + "__v", (dim,), np.float32, policy_name)
+        store.init_data(name + "__t", (), np.int64, policy_name)
+
+    def pull(self, client: KVClient, ids: np.ndarray) -> np.ndarray:
+        return client.pull(self.name, ids)
+
+    def push_grad(self, client: KVClient, ids: np.ndarray, grad: np.ndarray) -> None:
+        """Row-sparse Adam applied at the owners.
+
+        Duplicate IDs within a batch are first coalesced (summed) so each
+        row gets a single update — matching how DGL's sparse optimizer
+        behaves under synchronous training.
+        """
+        ids = np.asarray(ids, dtype=np.int64)
+        uniq, inv = np.unique(ids, return_inverse=True)
+        g = np.zeros((len(uniq), grad.shape[1]), dtype=np.float32)
+        np.add.at(g, inv, grad.astype(np.float32))
+
+        store, cfg = self.store, self.optim
+        pol = store.policy_for(self.name)
+        parts = pol.part_of(uniq)
+        local = pol.local_of(uniq, parts)
+        for p in range(store.num_parts):
+            m = parts == p
+            if not m.any():
+                continue
+            srv = store.servers[p]
+            rows = local[m]
+            gm = g[m]
+            t = srv.local_view(self.name + "__t")
+            mm = srv.local_view(self.name + "__m")
+            vv = srv.local_view(self.name + "__v")
+            w = srv.local_view(self.name)
+            t[rows] += 1
+            tr = t[rows].astype(np.float32)[:, None]
+            mm[rows] = cfg.beta1 * mm[rows] + (1 - cfg.beta1) * gm
+            vv[rows] = cfg.beta2 * vv[rows] + (1 - cfg.beta2) * gm * gm
+            mhat = mm[rows] / (1 - cfg.beta1 ** tr)
+            vhat = vv[rows] / (1 - cfg.beta2 ** tr)
+            w[rows] -= (cfg.lr * mhat / (np.sqrt(vhat) + cfg.eps)).astype(w.dtype)
+            nbytes = gm.nbytes
+            if p == getattr(client, "machine", p):
+                store.transport.charge_local(nbytes)
+            else:
+                store.transport.charge_remote(nbytes)

@@ -1,0 +1,186 @@
+"""Distributed in-memory key-value store for vertex/edge data (§5.4).
+
+One ``KVServer`` per machine holds the rows whose global IDs fall in that
+machine's partition range (per a ``PartitionPolicy`` — vertex data and edge
+data are partitioned differently, and heterographs can register separate
+policies per node/edge type). ``KVClient`` is what a trainer uses: ``pull``
+gathers rows by global ID (local rows via the shared-memory fast path,
+remote rows through the transport), ``push`` scatters values or gradient
+updates back to the owning servers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from .transport import Transport
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPolicy:
+    """Maps a global ID to (partition, local offset) via contiguous ranges.
+
+    Built from the partition book's node/edge offsets, which is exactly the
+    paper's scheme (binary search + subtraction).
+    """
+    name: str
+    offsets: np.ndarray   # (k+1,)
+
+    @property
+    def num_parts(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def total(self) -> int:
+        return int(self.offsets[-1])
+
+    def part_of(self, ids: np.ndarray) -> np.ndarray:
+        return (np.searchsorted(self.offsets, ids, side="right") - 1).astype(np.int32)
+
+    def local_of(self, ids: np.ndarray, parts: Optional[np.ndarray] = None) -> np.ndarray:
+        if parts is None:
+            parts = self.part_of(ids)
+        return ids - self.offsets[parts]
+
+    def part_size(self, p: int) -> int:
+        return int(self.offsets[p + 1] - self.offsets[p])
+
+
+class KVServer:
+    """Holds the local shard of every registered tensor."""
+
+    def __init__(self, part_id: int):
+        self.part_id = part_id
+        self._data: Dict[str, np.ndarray] = {}
+
+    def init_data(self, name: str, shape_suffix: tuple, dtype, policy: PartitionPolicy,
+                  init: Optional[Callable[[tuple], np.ndarray]] = None,
+                  rows: Optional[np.ndarray] = None) -> None:
+        n_local = policy.part_size(self.part_id)
+        shape = (n_local,) + tuple(shape_suffix)
+        if rows is not None:
+            assert rows.shape == shape, (rows.shape, shape)
+            # explicit copy: the server must own its shard (ascontiguousarray
+            # would alias the caller's buffer for contiguous slices)
+            self._data[name] = np.array(rows, dtype=dtype, copy=True)
+        elif init is not None:
+            self._data[name] = np.asarray(init(shape), dtype=dtype)
+        else:
+            self._data[name] = np.zeros(shape, dtype=dtype)
+
+    def local_view(self, name: str) -> np.ndarray:
+        """Shared-memory fast path: the trainer reads this array directly."""
+        return self._data[name]
+
+    def fetch(self, name: str, local_ids: np.ndarray) -> np.ndarray:
+        return self._data[name][local_ids]
+
+    def apply(self, name: str, local_ids: np.ndarray, values: np.ndarray,
+              reduce: str = "assign") -> None:
+        if reduce == "assign":
+            self._data[name][local_ids] = values
+        elif reduce == "sum":
+            np.add.at(self._data[name], local_ids, values)
+        else:
+            raise ValueError(reduce)
+
+
+class DistKVStore:
+    """The full store: all servers + a per-machine client view.
+
+    In production each machine would construct only its server and a client;
+    here the object graph holds all of them (one host), but clients only
+    touch remote servers through ``transport``-charged calls.
+    """
+
+    def __init__(self, policies: Dict[str, PartitionPolicy],
+                 transport: Optional[Transport] = None):
+        self.policies = dict(policies)
+        num_parts = next(iter(self.policies.values())).num_parts
+        for pol in self.policies.values():
+            assert pol.num_parts == num_parts
+        self.servers = [KVServer(p) for p in range(num_parts)]
+        self.transport = transport or Transport()
+        self._meta: Dict[str, tuple] = {}   # name -> (policy_name, dtype)
+
+    @property
+    def num_parts(self) -> int:
+        return len(self.servers)
+
+    def init_data(self, name: str, shape_suffix: tuple, dtype, policy_name: str,
+                  init: Optional[Callable[[tuple], np.ndarray]] = None,
+                  full_array: Optional[np.ndarray] = None) -> None:
+        pol = self.policies[policy_name]
+        self._meta[name] = (policy_name, np.dtype(dtype))
+        for server in self.servers:
+            rows = None
+            if full_array is not None:
+                lo, hi = int(pol.offsets[server.part_id]), int(pol.offsets[server.part_id + 1])
+                rows = full_array[lo:hi]
+            server.init_data(name, shape_suffix, dtype, pol, init=init, rows=rows)
+
+    def client(self, machine: int) -> "KVClient":
+        return KVClient(self, machine)
+
+    def policy_for(self, name: str) -> PartitionPolicy:
+        return self.policies[self._meta[name][0]]
+
+    def gather_all(self, name: str) -> np.ndarray:
+        """Debug/checkpoint helper: reassemble the full tensor."""
+        return np.concatenate([s.local_view(name) for s in self.servers], axis=0)
+
+
+class KVClient:
+    def __init__(self, store: DistKVStore, machine: int):
+        self.store = store
+        self.machine = machine
+
+    def pull(self, name: str, ids: np.ndarray) -> np.ndarray:
+        """Gather rows by global ID. Local rows: direct view indexing
+        (shared memory). Remote rows: transport-charged server fetch."""
+        store = self.store
+        pol = store.policy_for(name)
+        ids = np.asarray(ids, dtype=np.int64)
+        parts = pol.part_of(ids)
+        local_ids = pol.local_of(ids, parts)
+        sample = store.servers[self.machine].local_view(name)
+        out = np.empty((len(ids),) + sample.shape[1:], dtype=sample.dtype)
+        itemrow = sample.dtype.itemsize * int(np.prod(sample.shape[1:], initial=1))
+        for p in range(store.num_parts):
+            m = parts == p
+            if not m.any():
+                continue
+            rows = store.servers[p].fetch(name, local_ids[m])
+            out[m] = rows
+            nbytes = int(m.sum()) * itemrow
+            if p == self.machine:
+                store.transport.charge_local(nbytes)
+            else:
+                store.transport.charge_remote(nbytes)
+        return out
+
+    def push(self, name: str, ids: np.ndarray, values: np.ndarray,
+             reduce: str = "sum") -> None:
+        store = self.store
+        pol = store.policy_for(name)
+        ids = np.asarray(ids, dtype=np.int64)
+        parts = pol.part_of(ids)
+        local_ids = pol.local_of(ids, parts)
+        itemrow = values.dtype.itemsize * int(np.prod(values.shape[1:], initial=1))
+        for p in range(store.num_parts):
+            m = parts == p
+            if not m.any():
+                continue
+            store.servers[p].apply(name, local_ids[m], values[m], reduce=reduce)
+            nbytes = int(m.sum()) * itemrow
+            if p == self.machine:
+                store.transport.charge_local(nbytes)
+            else:
+                store.transport.charge_remote(nbytes)
+
+    def local_fraction(self, name: str, ids: np.ndarray) -> float:
+        pol = self.store.policy_for(name)
+        parts = pol.part_of(np.asarray(ids, dtype=np.int64))
+        return float((parts == self.machine).mean()) if len(ids) else 1.0

@@ -1,0 +1,66 @@
+"""Transport layer between KVStore clients and servers.
+
+On a real cluster the local partition is reached through shared memory
+(zero-copy — §5.4 "uses shared memory to access data in the local KVStore
+server to minimize data copy") and remote partitions over TCP. This
+container is one host, so *correctness* is exact (separate per-partition
+arrays, all remote accesses go through ``remote_fetch``/``remote_apply``)
+while the *network cost* is modeled: every remote byte is charged to a
+latency+bandwidth accountant that benchmarks read out, and can optionally
+really sleep to make pipeline-overlap benchmarks honest in wall-clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+
+@dataclasses.dataclass
+class NetworkModel:
+    """Cost model: t = latency + bytes / bandwidth (per request)."""
+    latency_s: float = 100e-6           # ~100us RPC latency
+    bandwidth_Bps: float = 12.5e9       # 100 Gbps, the paper's cluster
+    sleep: bool = False                 # really sleep (for wall-clock benches)
+
+    def cost(self, nbytes: int) -> float:
+        return self.latency_s + nbytes / self.bandwidth_Bps
+
+
+class Transport:
+    def __init__(self, model: NetworkModel | None = None):
+        self.model = model or NetworkModel()
+        self._lock = threading.Lock()
+        self.remote_bytes = 0
+        self.remote_requests = 0
+        self.local_bytes = 0
+        self.simulated_time_s = 0.0
+
+    def charge_remote(self, nbytes: int) -> None:
+        t = self.model.cost(nbytes)
+        with self._lock:
+            self.remote_bytes += nbytes
+            self.remote_requests += 1
+            self.simulated_time_s += t
+        if self.model.sleep:
+            time.sleep(t)
+
+    def charge_local(self, nbytes: int) -> None:
+        with self._lock:
+            self.local_bytes += nbytes
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "remote_bytes": self.remote_bytes,
+                "remote_requests": self.remote_requests,
+                "local_bytes": self.local_bytes,
+                "simulated_network_s": self.simulated_time_s,
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self.remote_bytes = 0
+            self.remote_requests = 0
+            self.local_bytes = 0
+            self.simulated_time_s = 0.0

@@ -1,0 +1,12 @@
+from .multilevel import (balance_report, edge_cut, make_constraints,
+                         partition_graph, random_partition)
+from .book import GraphPartition, PartitionBook, build_partitions, halo_stats
+from .hierarchical import (HierarchicalPartition, hierarchical_partition,
+                           locality_report, split_training_set)
+
+__all__ = [
+    "balance_report", "edge_cut", "make_constraints", "partition_graph",
+    "random_partition", "GraphPartition", "PartitionBook", "build_partitions",
+    "halo_stats", "HierarchicalPartition", "hierarchical_partition",
+    "locality_report", "split_training_set",
+]

@@ -1,0 +1,156 @@
+"""Partition book + physical graph partitions (§5.3).
+
+Implements the paper's partition-data layout:
+
+* vertex/edge **ID relabeling** so every partition's core vertices and edges
+  occupy a contiguous range of the new global ID space — global→partition is
+  a binary search over a (k+1) offsets array, global→local a subtraction;
+* **edge assignment** to the partition of the *destination* vertex
+  (owner-compute: the owner of a target vertex can sample its in-neighbors
+  locally without talking to other samplers);
+* **HALO vertices**: source endpoints of assigned edges that are core in
+  another partition are duplicated into the local node space (structure
+  only — features are never duplicated, exactly as in the paper).
+
+Each physical partition stores an in-neighbor CSR over its local ID space
+(core rows only; sampling dispatches frontier nodes to their owners, so halo
+rows are never expanded locally).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from ...graph.csr import CSRGraph, to_coo
+
+
+@dataclasses.dataclass
+class GraphPartition:
+    """One machine's physical partition (local in-CSR, core rows)."""
+    part_id: int
+    indptr: np.ndarray        # (n_core + 1,)
+    indices: np.ndarray       # (m_local,) LOCAL src ids (core then halo space)
+    edge_ids: np.ndarray      # (m_local,) NEW global edge ids
+    etypes: Optional[np.ndarray]
+    local2global: np.ndarray  # (n_local,) NEW global node ids; [:n_core] core
+    n_core: int
+
+    @property
+    def n_local(self) -> int:
+        return len(self.local2global)
+
+    @property
+    def n_halo(self) -> int:
+        return self.n_local - self.n_core
+
+    @property
+    def num_local_edges(self) -> int:
+        return len(self.indices)
+
+
+@dataclasses.dataclass
+class PartitionBook:
+    """Global metadata shared by every machine (tiny)."""
+    num_parts: int
+    node_offsets: np.ndarray   # (k+1,) new-global node-ID range per partition
+    edge_offsets: np.ndarray   # (k+1,)
+    new2old_node: np.ndarray   # (n,) permutation
+    old2new_node: np.ndarray
+    new2old_edge: np.ndarray
+    old2new_edge: np.ndarray
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.node_offsets[-1])
+
+    def nid2part(self, nids: np.ndarray) -> np.ndarray:
+        """Binary search in the small offsets array (paper's lookup)."""
+        return (np.searchsorted(self.node_offsets, nids, side="right") - 1).astype(np.int32)
+
+    def nid2local(self, nids: np.ndarray, parts: Optional[np.ndarray] = None) -> np.ndarray:
+        if parts is None:
+            parts = self.nid2part(nids)
+        return nids - self.node_offsets[parts]
+
+    def eid2part(self, eids: np.ndarray) -> np.ndarray:
+        return (np.searchsorted(self.edge_offsets, eids, side="right") - 1).astype(np.int32)
+
+    def part_core_range(self, p: int) -> tuple[int, int]:
+        return int(self.node_offsets[p]), int(self.node_offsets[p + 1])
+
+
+def build_partitions(g: CSRGraph, parts: np.ndarray
+                     ) -> tuple[PartitionBook, List[GraphPartition]]:
+    """Relabel IDs and materialize per-partition physical subgraphs."""
+    n = g.num_nodes
+    k = int(parts.max()) + 1 if len(parts) else 1
+    parts = parts.astype(np.int64)
+
+    # ---- node relabel: order by (partition, old id) ----
+    new2old_node = np.argsort(parts, kind="stable").astype(np.int64)
+    old2new_node = np.empty(n, dtype=np.int64)
+    old2new_node[new2old_node] = np.arange(n, dtype=np.int64)
+    counts = np.bincount(parts, minlength=k)
+    node_offsets = np.zeros(k + 1, dtype=np.int64)
+    np.cumsum(counts, out=node_offsets[1:])
+
+    # ---- edge assignment to partition(dst), relabel ----
+    src_old, dst_old = to_coo(g)
+    src = old2new_node[src_old]
+    dst = old2new_node[dst_old]
+    eparts = parts[dst_old]
+    # new edge id order: (partition, dst, original)
+    order = np.lexsort((np.arange(len(src)), dst, eparts))
+    new2old_edge = order.astype(np.int64)
+    old2new_edge = np.empty(len(src), dtype=np.int64)
+    old2new_edge[order] = np.arange(len(src), dtype=np.int64)
+    ecounts = np.bincount(eparts, minlength=k)
+    edge_offsets = np.zeros(k + 1, dtype=np.int64)
+    np.cumsum(ecounts, out=edge_offsets[1:])
+
+    book = PartitionBook(num_parts=k, node_offsets=node_offsets,
+                         edge_offsets=edge_offsets,
+                         new2old_node=new2old_node, old2new_node=old2new_node,
+                         new2old_edge=new2old_edge, old2new_edge=old2new_edge)
+
+    src_sorted = src[order]
+    dst_sorted = dst[order]
+    et_sorted = None if g.etypes is None else g.etypes[new2old_edge]
+
+    partitions = []
+    for p in range(k):
+        elo, ehi = int(edge_offsets[p]), int(edge_offsets[p + 1])
+        nlo, nhi = int(node_offsets[p]), int(node_offsets[p + 1])
+        n_core = nhi - nlo
+        e_src = src_sorted[elo:ehi]          # global new ids
+        e_dst = dst_sorted[elo:ehi]          # all inside [nlo, nhi)
+        # halo: srcs outside the core range
+        outside = (e_src < nlo) | (e_src >= nhi)
+        halo_g = np.unique(e_src[outside])
+        local2global = np.concatenate(
+            [np.arange(nlo, nhi, dtype=np.int64), halo_g])
+        # map global src -> local id
+        src_local = np.where(~outside, e_src - nlo, 0)
+        if len(halo_g):
+            src_local = np.where(
+                outside, n_core + np.searchsorted(halo_g, e_src), src_local)
+        dst_local = e_dst - nlo
+        # in-CSR rows over core nodes (edges already sorted by dst)
+        indptr = np.zeros(n_core + 1, dtype=np.int64)
+        np.add.at(indptr, dst_local + 1, 1)
+        np.cumsum(indptr, out=indptr)
+        partitions.append(GraphPartition(
+            part_id=p, indptr=indptr, indices=src_local.astype(np.int64),
+            edge_ids=np.arange(elo, ehi, dtype=np.int64),
+            etypes=None if et_sorted is None else et_sorted[elo:ehi],
+            local2global=local2global, n_core=n_core))
+    return book, partitions
+
+
+def halo_stats(partitions: List[GraphPartition]) -> dict:
+    n_core = sum(p.n_core for p in partitions)
+    n_halo = sum(p.n_halo for p in partitions)
+    return {"core": n_core, "halo": n_halo,
+            "halo_ratio": n_halo / max(n_core, 1)}

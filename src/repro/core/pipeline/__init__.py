@@ -1,0 +1,4 @@
+from .async_pipeline import AsyncPipeline, Stage, StageStats
+from .minibatch import MinibatchPipeline
+
+__all__ = ["AsyncPipeline", "Stage", "StageStats", "MinibatchPipeline"]

@@ -1,0 +1,159 @@
+"""Generic multi-stage asynchronous pipeline with per-stage bounded queues
+(§5.5, Fig. 7).
+
+Every stage runs in its own thread and communicates through a bounded queue
+whose depth encodes the paper's "different degrees of aggressiveness in
+different stages": deep queues at the cheap front of the pipeline (batch
+scheduling, sampling), shallow ones near the device (depth 1 for device
+prefetch, because accelerator memory is scarce). A stage that is slower than
+its consumers simply keeps its queue drained; a stage slower than its
+*producers* exerts backpressure through the bounded queue — no global
+barrier anywhere, which is how the pipeline hides both I/O latency and the
+per-batch imbalance of GNN sampling.
+
+``sync=True`` collapses the whole thing into an inline loop — the
+no-pipelining baseline used for the Fig. 14 ablation.
+
+Per-stage wall-time and occupancy counters feed the Table-2-style breakdown
+benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Iterable, Iterator, List, Optional
+
+_SENTINEL = object()
+
+
+@dataclasses.dataclass
+class Stage:
+    name: str
+    fn: Callable[[Any], Any]
+    depth: int = 2          # output queue bound (ahead-of-time aggressiveness)
+
+
+@dataclasses.dataclass
+class StageStats:
+    items: int = 0
+    busy_s: float = 0.0
+    wait_in_s: float = 0.0     # starved (waiting for producer)
+    wait_out_s: float = 0.0    # backpressured (waiting for consumer)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+class AsyncPipeline:
+    """Drive ``source`` through ``stages``; iterate results.
+
+    The source iterable runs in its own feeder thread so that *scheduling*
+    (the first pipeline stage in Fig. 7) is also asynchronous.
+    """
+
+    def __init__(self, source: Iterable[Any], stages: List[Stage], *,
+                 sync: bool = False, name: str = "pipeline"):
+        self.source = source
+        self.stages = stages
+        self.sync = sync
+        self.name = name
+        self.stats = {s.name: StageStats() for s in stages}
+        self._threads: List[threading.Thread] = []
+        self._queues: List[queue.Queue] = []
+        self._stop = threading.Event()
+        self._started = False
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def __iter__(self) -> Iterator[Any]:
+        if self.sync:
+            yield from self._run_sync()
+            return
+        self.start()
+        out_q = self._queues[-1]
+        while True:
+            item = out_q.get()
+            if item is _SENTINEL:
+                if self._error is not None:
+                    raise self._error
+                return
+            yield item
+
+    def _run_sync(self) -> Iterator[Any]:
+        for item in self.source:
+            for s in self.stages:
+                st = self.stats[s.name]
+                t0 = time.perf_counter()
+                item = s.fn(item)
+                st.busy_s += time.perf_counter() - t0
+                st.items += 1
+            yield item
+
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        if self._started:
+            return
+        self._started = True
+        # queue[0] feeds stage 0; queue[i+1] is stage i's output
+        self._queues = [queue.Queue(maxsize=max(self.stages[0].depth, 1))]
+        for s in self.stages:
+            self._queues.append(queue.Queue(maxsize=max(s.depth, 1)))
+
+        def feeder():
+            try:
+                for item in self.source:
+                    if self._stop.is_set():
+                        break
+                    self._queues[0].put(item)
+            except BaseException as e:   # propagate into the consumer
+                self._error = e
+            finally:
+                self._queues[0].put(_SENTINEL)
+
+        t = threading.Thread(target=feeder, name=f"{self.name}-feed", daemon=True)
+        t.start()
+        self._threads.append(t)
+
+        for i, s in enumerate(self.stages):
+            t = threading.Thread(target=self._stage_loop, args=(i, s),
+                                 name=f"{self.name}-{s.name}", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _stage_loop(self, i: int, s: Stage) -> None:
+        in_q, out_q = self._queues[i], self._queues[i + 1]
+        st = self.stats[s.name]
+        while True:
+            t0 = time.perf_counter()
+            item = in_q.get()
+            t1 = time.perf_counter()
+            st.wait_in_s += t1 - t0
+            if item is _SENTINEL or self._stop.is_set():
+                out_q.put(_SENTINEL)
+                return
+            try:
+                out = s.fn(item)
+            except BaseException as e:
+                self._error = e
+                out_q.put(_SENTINEL)
+                return
+            t2 = time.perf_counter()
+            st.busy_s += t2 - t1
+            out_q.put(out)
+            st.wait_out_s += time.perf_counter() - t2
+            st.items += 1
+
+    def stop(self) -> None:
+        self._stop.set()
+        # drain so producer threads blocked on put() can exit
+        for q in self._queues:
+            try:
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass
+
+    def stats_report(self) -> dict:
+        return {k: v.as_dict() for k, v in self.stats.items()}

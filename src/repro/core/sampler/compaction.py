@@ -1,0 +1,105 @@
+"""Device-side subgraph compaction — the paper's ``to_block``-on-GPU
+(§5.5.1: "after sampling a subgraph, we move the subgraph to GPU and perform
+to_block on GPUs"), adapted to TPU constraints: everything is static-shape,
+sort-based (no dynamic ``unique``), jittable, and runs in the training
+thread stage of the pipeline.
+
+Given padded seed gids and padded edge src gids, produce:
+  * ``uniq``      (cap_src,) unique gids in first-occurrence order (seeds
+                  first — the to_block dst-prefix invariant), padded;
+  * ``n_uniq``    scalar count;
+  * ``edge_src``  (cap_edge,) compacted src index per edge.
+
+Algorithm: stable-sort by gid; flag group heads; each group's head priority
+(= first occurrence position, with padding pushed to +inf) is ranked to
+recover first-occurrence order; ranks are scattered back through the sort
+permutation. O(N log N) sort + O(N) scans — MXU-free but VPU/sort friendly,
+which is exactly why the paper moves it off the (busy) host CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# sentinel: max of the id dtype actually in use (int32 unless x64 enabled —
+# node ids fit int32 at any scale this host reaches; a real deployment
+# enables x64 and the same code uses the int64 max)
+_ID_DTYPE = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+_BIG = int(jnp.iinfo(_ID_DTYPE).max)
+
+
+def _propagate_group_head(values: jnp.ndarray, is_head: jnp.ndarray) -> jnp.ndarray:
+    """For each position, the ``values`` entry at its group head.
+    (last-set-value scan; groups are contiguous runs.)"""
+    def combine(a, b):
+        va, fa = a
+        vb, fb = b
+        return jnp.where(fb, vb, va), fa | fb
+    out, _ = jax.lax.associative_scan(combine, (values, is_head))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("cap_src",))
+def to_block_device(seed_gids: jnp.ndarray, seed_mask: jnp.ndarray,
+                    edge_gids: jnp.ndarray, edge_mask: jnp.ndarray,
+                    cap_src: int):
+    """Static-shape first-occurrence compaction. See module docstring."""
+    seed_gids = seed_gids.astype(_ID_DTYPE)
+    edge_gids = edge_gids.astype(_ID_DTYPE)
+    n_seed = seed_gids.shape[0]
+    ids = jnp.concatenate([
+        jnp.where(seed_mask, seed_gids, _BIG),
+        jnp.where(edge_mask, edge_gids, _BIG)])
+    n = ids.shape[0]
+    prio = jnp.where(ids == _BIG, _BIG, jnp.arange(n, dtype=_ID_DTYPE))
+
+    order = jnp.argsort(ids, stable=True)
+    sid = ids[order]
+    sprio = prio[order]
+    is_head = jnp.concatenate([jnp.ones((1,), bool), sid[1:] != sid[:-1]])
+    group = jnp.cumsum(is_head) - 1                      # (n,) contiguous
+    head_prio = _propagate_group_head(sprio, is_head)    # min prio per group
+
+    # rank groups by head priority (== first occurrence order)
+    gfp = jnp.full((n,), _BIG, dtype=_ID_DTYPE)
+    gfp = gfp.at[jnp.where(is_head, group, n - 1)].min(
+        jnp.where(is_head, head_prio, _BIG), mode="drop")
+    ord2 = jnp.argsort(gfp)
+    grank = jnp.zeros((n,), dtype=jnp.int32).at[ord2].set(
+        jnp.arange(n, dtype=jnp.int32))
+
+    new_idx_sorted = grank[group]
+    new_idx = jnp.zeros((n,), jnp.int32).at[order].set(new_idx_sorted)
+    edge_src = new_idx[n_seed:]
+
+    # unique ids in rank order
+    head_rank = jnp.where(is_head & (sprio != _BIG), grank[group], cap_src)
+    uniq = jnp.zeros((cap_src,), _ID_DTYPE).at[head_rank].set(sid, mode="drop")
+    n_uniq = jnp.sum(is_head & (head_prio != _BIG)).astype(jnp.int32)
+    # padded uniq slots repeat slot 0 (valid gid) so feature gathers stay real
+    uniq = jnp.where(jnp.arange(cap_src) < n_uniq, uniq, uniq[0])
+    return uniq, n_uniq, edge_src
+
+
+def to_block_reference(seed_gids: np.ndarray, seed_mask: np.ndarray,
+                       edge_gids: np.ndarray, edge_mask: np.ndarray,
+                       cap_src: int):
+    """NumPy oracle (the host compaction the sampler uses)."""
+    seeds = np.asarray(seed_gids)[np.asarray(seed_mask)]
+    egs = np.asarray(edge_gids)[np.asarray(edge_mask)]
+    allids = np.concatenate([seeds, egs])
+    _, first = np.unique(allids, return_index=True)
+    uniq = allids[np.sort(first)]
+    n_uniq = len(uniq)
+    lookup = {g: i for i, g in enumerate(uniq.tolist())}
+    edge_src = np.zeros(len(edge_gids), dtype=np.int32)
+    em = np.asarray(edge_mask)
+    for i, (g, m) in enumerate(zip(np.asarray(edge_gids).tolist(), em.tolist())):
+        if m:
+            edge_src[i] = lookup[g]
+    out = np.full(cap_src, uniq[0] if n_uniq else 0, dtype=np.int64)
+    out[:n_uniq] = uniq[:cap_src]
+    return out, n_uniq, edge_src

@@ -1,0 +1,136 @@
+"""Distributed multi-hop neighbor sampling with owner-compute dispatch
+(§5.5.1) producing padded MFG mini-batches.
+
+For every hop, frontier vertices are grouped by owning partition (binary
+search in the partition book); each owner samples its vertices' in-neighbors
+on its local physical partition (``sample_local``) and the trainer stitches
+the per-partition results into one bipartite block. Seeds owned by the
+trainer's own machine are sampled through the shared-memory path; seeds
+owned elsewhere are counted as remote sampling requests (the transport is
+charged for the request + response bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from ..kvstore.transport import Transport
+from ..partition.book import GraphPartition, PartitionBook
+from .mfg import MFGBlock, MiniBatch, capacities, pad_block
+from .neighbor import sample_local
+
+
+def _unique_first_occurrence(ids: np.ndarray) -> np.ndarray:
+    """Unique preserving first-occurrence order."""
+    uniq, first = np.unique(ids, return_index=True)
+    return ids[np.sort(first)]
+
+
+@dataclasses.dataclass
+class SamplerStats:
+    batches: int = 0
+    seeds_total: int = 0
+    seeds_remote: int = 0
+    edges_total: int = 0
+    input_nodes_total: int = 0
+
+    @property
+    def remote_seed_frac(self) -> float:
+        return self.seeds_remote / max(self.seeds_total, 1)
+
+
+class DistributedSampler:
+    """One trainer's sampler (runs in the sampling thread, §5.5).
+
+    fanouts are input-layer first (the paper's "15, 10, 5"). ``machine`` is
+    the trainer's home machine: its partition is accessed via shared memory,
+    all other partitions through (simulated) RPC.
+    """
+
+    def __init__(self, book: PartitionBook, partitions: List[GraphPartition],
+                 fanouts: Sequence[int], batch_size: int, machine: int = 0,
+                 transport: Optional[Transport] = None, seed: int = 0):
+        self.book = book
+        self.partitions = partitions
+        self.fanouts = list(fanouts)
+        self.batch_size = batch_size
+        self.machine = machine
+        self.transport = transport
+        self.caps = capacities(batch_size, self.fanouts)
+        self.rng = np.random.default_rng(seed)
+        self.stats = SamplerStats()
+
+    # ------------------------------------------------------------------
+    def sample(self, seeds: np.ndarray, labels: Optional[np.ndarray] = None,
+               batch_index: int = -1, epoch: int = -1) -> MiniBatch:
+        """Build the padded multi-layer MFG for ``seeds`` (global IDs)."""
+        seeds = np.asarray(seeds, dtype=np.int64)
+        n_seed = len(seeds)
+        assert n_seed <= self.batch_size
+        book = self.book
+
+        cur = seeds
+        blocks_rev: List[MFGBlock] = []
+        for hop, fanout in enumerate(reversed(self.fanouts)):
+            cap_src, cap_edge = self.caps[len(self.fanouts) - 1 - hop]
+            parts = book.nid2part(cur)
+            e_src_g: List[np.ndarray] = []
+            e_dst_i: List[np.ndarray] = []
+            e_type: List[np.ndarray] = []
+            typed = False
+            for p in np.unique(parts):
+                sel = np.nonzero(parts == p)[0]
+                local = book.nid2local(cur[sel], parts[sel])
+                src_g, seed_pos, eids, etyp = sample_local(
+                    self.partitions[int(p)], local, fanout, self.rng)
+                e_src_g.append(src_g)
+                e_dst_i.append(sel[seed_pos].astype(np.int32))
+                if etyp is not None:
+                    typed = True
+                    e_type.append(etyp)
+                # network accounting: remote sampling request/response
+                self.stats.seeds_total += len(sel)
+                if int(p) != self.machine:
+                    self.stats.seeds_remote += len(sel)
+                    if self.transport is not None:
+                        req = len(sel) * 8
+                        resp = len(src_g) * (8 + 8 + 4)
+                        self.transport.charge_remote(req + resp)
+            src_gids = (np.concatenate(e_src_g) if e_src_g
+                        else np.empty(0, dtype=np.int64))
+            dst_idx = (np.concatenate(e_dst_i) if e_dst_i
+                       else np.empty(0, dtype=np.int32))
+            etypes = np.concatenate(e_type) if typed else None
+
+            # next-layer inputs: current seeds first (to_block prefix rule)
+            uniq = _unique_first_occurrence(np.concatenate([cur, src_gids]))
+            # host-side compaction of src indices (device version:
+            # core.sampler.compaction, used by the GPU pipeline stage)
+            order = np.argsort(uniq, kind="stable")
+            pos_sorted = np.searchsorted(uniq[order], src_gids)
+            src_idx = order[pos_sorted].astype(np.int32)
+
+            blocks_rev.append(pad_block(
+                uniq, src_idx, dst_idx, etypes, num_dst=len(cur),
+                cap_src=cap_src, cap_edge=cap_edge))
+            self.stats.edges_total += len(src_gids)
+            cur = uniq
+
+        self.stats.batches += 1
+        self.stats.input_nodes_total += len(cur)
+
+        blocks = blocks_rev[::-1]
+        seed_pad = np.full(self.batch_size, seeds[0] if n_seed else 0,
+                           dtype=np.int64)
+        seed_pad[:n_seed] = seeds
+        seed_mask = np.zeros(self.batch_size, dtype=bool)
+        seed_mask[:n_seed] = True
+        lab = None
+        if labels is not None:
+            lab = np.zeros(self.batch_size, dtype=np.int64)
+            lab[:n_seed] = labels
+        return MiniBatch(blocks=blocks, seeds=seed_pad, seed_mask=seed_mask,
+                         labels=lab, input_gids=blocks[0].src_gids,
+                         batch_index=batch_index, epoch=epoch)

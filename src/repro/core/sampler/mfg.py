@@ -1,0 +1,105 @@
+"""Padded message-flow-graph (MFG) mini-batches.
+
+DGL mini-batches are ragged; XLA/TPU wants one compiled shape. Every layer's
+block is padded to *static capacities* derived from (batch_size, fanouts):
+
+    cap_dst[L-1] = batch_size
+    cap_edge[l]  = cap_dst[l] * fanout[l]
+    cap_src[l]   = cap_dst[l] + cap_edge[l]   (self nodes first, then newly
+                                               discovered neighbors)
+    cap_dst[l-1] = cap_src[l]
+
+The dst nodes of each block are a prefix of its src nodes (DGL's ``to_block``
+invariant), so layer l+1 can slice its inputs from layer l's outputs.
+Padding is masked out of aggregation; padded node slots repeat a valid ID so
+feature gathers stay in-bounds. The harness reports padding waste — it is
+part of the TPU-adaptation story (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class MFGBlock:
+    """One GNN layer's bipartite block (host arrays, padded)."""
+    src_gids: np.ndarray       # (cap_src,) int64 global node ids, dst prefix
+    edge_src: np.ndarray       # (cap_edge,) int32 index into src_gids
+    edge_dst: np.ndarray       # (cap_edge,) int32 index into dst prefix
+    edge_mask: np.ndarray      # (cap_edge,) bool
+    edge_types: np.ndarray     # (cap_edge,) int32 (zeros if untyped)
+    num_src: int
+    num_dst: int
+    num_edges: int
+
+    @property
+    def cap_src(self) -> int:
+        return len(self.src_gids)
+
+    @property
+    def cap_edge(self) -> int:
+        return len(self.edge_src)
+
+
+@dataclasses.dataclass
+class MiniBatch:
+    """Blocks are input-layer first: blocks[0] consumes raw features."""
+    blocks: List[MFGBlock]
+    seeds: np.ndarray              # (batch,) target node gids (padded)
+    seed_mask: np.ndarray          # (batch,) bool
+    labels: Optional[np.ndarray]   # (batch,) int64
+    input_gids: np.ndarray         # == blocks[0].src_gids
+    input_feats: Optional[np.ndarray] = None   # filled by CPU prefetch stage
+    batch_index: int = -1
+    epoch: int = -1
+
+    @property
+    def num_input_nodes(self) -> int:
+        return self.blocks[0].num_src
+
+    def padding_waste(self) -> dict:
+        """Fraction of padded slots (reported in benchmarks)."""
+        e_cap = sum(b.cap_edge for b in self.blocks)
+        e_use = sum(b.num_edges for b in self.blocks)
+        s_cap = sum(b.cap_src for b in self.blocks)
+        s_use = sum(b.num_src for b in self.blocks)
+        return {"edge_fill": e_use / max(e_cap, 1),
+                "node_fill": s_use / max(s_cap, 1)}
+
+
+def capacities(batch_size: int, fanouts: Sequence[int]) -> list[tuple[int, int]]:
+    """[(cap_src, cap_edge) per layer], input-layer first."""
+    caps = []
+    cap_dst = batch_size
+    for f in reversed(list(fanouts)):       # walk from target layer inward
+        cap_edge = cap_dst * f
+        cap_src = cap_dst + cap_edge
+        caps.append((cap_src, cap_edge))
+        cap_dst = cap_src
+    return caps[::-1]
+
+
+def pad_block(src_gids: np.ndarray, edge_src: np.ndarray, edge_dst: np.ndarray,
+              edge_types: Optional[np.ndarray], num_dst: int,
+              cap_src: int, cap_edge: int) -> MFGBlock:
+    n_src, n_edge = len(src_gids), len(edge_src)
+    assert n_src <= cap_src, (n_src, cap_src)
+    assert n_edge <= cap_edge, (n_edge, cap_edge)
+    pad_gid = src_gids[0] if n_src else 0
+    sg = np.full(cap_src, pad_gid, dtype=np.int64)
+    sg[:n_src] = src_gids
+    es = np.zeros(cap_edge, dtype=np.int32)
+    ed = np.zeros(cap_edge, dtype=np.int32)
+    em = np.zeros(cap_edge, dtype=bool)
+    et = np.zeros(cap_edge, dtype=np.int32)
+    es[:n_edge] = edge_src
+    ed[:n_edge] = edge_dst
+    em[:n_edge] = True
+    if edge_types is not None:
+        et[:n_edge] = edge_types
+    return MFGBlock(src_gids=sg, edge_src=es, edge_dst=ed, edge_mask=em,
+                    edge_types=et, num_src=n_src, num_dst=num_dst,
+                    num_edges=n_edge)

@@ -1,0 +1,63 @@
+"""Per-partition vertex-wise neighbor sampling (§5.5.1).
+
+``sample_local`` is what a sampler *server* runs on its own physical
+partition: given the seed vertices it owns (local core IDs), draw at most
+``fanout`` in-neighbors per seed without replacement, returning global IDs.
+The computation is per-vertex independent — the property the paper exploits
+to decompose sampling across machines.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..partition.book import GraphPartition
+
+
+def sample_local(gp: GraphPartition, local_seeds: np.ndarray, fanout: int,
+                 rng: np.random.Generator,
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, Optional[np.ndarray]]:
+    """Sample in-neighbors of ``local_seeds`` (core-local IDs) on ``gp``.
+
+    Returns (src_gids, seed_pos, edge_ids, etypes): one row per sampled
+    edge; ``seed_pos`` indexes into ``local_seeds`` (the caller knows which
+    global seed that is). fanout < 0 means "all neighbors".
+    """
+    indptr, indices = gp.indptr, gp.indices
+    starts = indptr[local_seeds]
+    degs = indptr[local_seeds + 1] - starts
+
+    if fanout < 0:
+        counts = degs
+    else:
+        counts = np.minimum(degs, fanout)
+    total = int(counts.sum())
+    if total == 0:
+        z = np.empty(0, dtype=np.int64)
+        return z, z.astype(np.int32), z, (None if gp.etypes is None else z.astype(np.int32))
+
+    seed_pos = np.repeat(np.arange(len(local_seeds), dtype=np.int32), counts)
+    # positions within each seed's adjacency list
+    ends = np.cumsum(counts)
+    offs = np.arange(total, dtype=np.int64) - np.repeat(ends - counts, counts)
+
+    take_all = (fanout < 0) | (degs <= fanout) if fanout >= 0 else np.ones(len(degs), bool)
+    pos = np.empty(total, dtype=np.int64)
+    # full-neighborhood seeds: contiguous ranges (vectorized)
+    full_rows = np.repeat(take_all, counts)
+    pos[full_rows] = np.repeat(starts, counts)[full_rows] + offs[full_rows]
+    # subsampled seeds: per-seed partial Fisher–Yates (without replacement)
+    sub = np.nonzero(~take_all)[0]
+    if len(sub):
+        out_off = (ends - counts)
+        for i in sub:
+            d = int(degs[i])
+            picks = rng.choice(d, size=fanout, replace=False)
+            pos[out_off[i]: out_off[i] + fanout] = starts[i] + picks
+
+    src_local = indices[pos]
+    src_gids = gp.local2global[src_local]
+    edge_ids = gp.edge_ids[pos]
+    etypes = None if gp.etypes is None else gp.etypes[pos]
+    return src_gids, seed_pos, edge_ids, etypes

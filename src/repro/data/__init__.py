@@ -1,0 +1,3 @@
+from .stream import TokenStream
+
+__all__ = ["TokenStream"]

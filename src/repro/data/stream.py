@@ -1,0 +1,111 @@
+"""Token data pipeline for the LM architectures.
+
+This is where DistDGLv2's core idea transfers to sequence models (DESIGN.md
+§Arch-applicability): host-side batch assembly runs through the same
+:class:`AsyncPipeline` (schedule -> assemble -> host prefetch -> device
+prefetch, per-stage bounded queues, non-stop across epochs) so the
+accelerator never waits on the input pipeline. The "owner-compute split"
+maps to per-host sharding of the sample stream.
+
+Sources: a synthetic structured-token generator (offline default — token
+streams with learnable n-gram structure so loss curves are meaningful) or
+a memory-mapped token file.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+from ..core.pipeline import AsyncPipeline, Stage
+
+
+def _synthetic_tokens(rng: np.random.Generator, vocab: int, n: int,
+                      order: int = 2, alpha: float = 0.9) -> np.ndarray:
+    """Markov-ish stream: next token depends on the previous one (a learnable
+    structure; uniform random tokens would give a flat loss)."""
+    # deterministic per-token successor table
+    table_rng = np.random.default_rng(12345)
+    succ = table_rng.integers(0, vocab, size=(vocab, 4))
+    out = np.empty(n, dtype=np.int32)
+    out[0] = rng.integers(0, vocab)
+    picks = rng.integers(0, 4, size=n)
+    noise = rng.random(n)
+    rand = rng.integers(0, vocab, size=n)
+    for i in range(1, n):
+        out[i] = succ[out[i - 1], picks[i]] if noise[i] < alpha else rand[i]
+    return out
+
+
+class TokenStream:
+    """Iterator of device-ready LM batches through the async pipeline."""
+
+    def __init__(self, vocab: int, batch: int, seq: int, *, cfg=None,
+                 seed: int = 0, host_index: int = 0, host_count: int = 1,
+                 sync: bool = False, file: Optional[str] = None,
+                 depths: Optional[dict] = None):
+        self.vocab = vocab
+        self.batch = batch
+        self.seq = seq
+        self.cfg = cfg
+        self.rng = np.random.default_rng(seed + 7919 * host_index)
+        self.host_index = host_index
+        self.host_count = host_count
+        self.file = None
+        if file is not None:
+            self.file = np.memmap(file, dtype=np.int32, mode="r")
+        d = {"assemble": 8, "host_prefetch": 4, "device_prefetch": 1}
+        d.update(depths or {})
+        stages = [
+            Stage("assemble", self._assemble, depth=d["assemble"]),
+            Stage("host_prefetch", self._host_prefetch,
+                  depth=d["host_prefetch"]),
+            Stage("device_prefetch", self._device_prefetch,
+                  depth=d["device_prefetch"]),
+        ]
+        self._pipe = AsyncPipeline(self._schedule(), stages, sync=sync,
+                                   name="tokenstream")
+        self._it = iter(self._pipe)
+
+    # ---- stages -------------------------------------------------------
+    def _schedule(self) -> Iterator[int]:
+        i = self.host_index          # owner-compute split over hosts
+        while True:
+            yield i
+            i += self.host_count
+
+    def _assemble(self, index: int) -> dict:
+        n = self.batch * self.seq
+        if self.file is not None:
+            total = len(self.file) - n - 1
+            off = int(self.rng.integers(0, max(total, 1)))
+            toks = np.asarray(self.file[off:off + n], dtype=np.int32)
+        else:
+            toks = _synthetic_tokens(self.rng, self.vocab, n)
+        return {"tokens": toks.reshape(self.batch, self.seq)}
+
+    def _host_prefetch(self, batch: dict) -> dict:
+        cfg = self.cfg
+        if cfg is not None and cfg.arch_type == "vlm":
+            batch["image_embeds"] = self.rng.standard_normal(
+                (self.batch, cfg.num_image_tokens, cfg.d_model)
+            ).astype(np.float32)
+        if cfg is not None and cfg.arch_type == "audio":
+            batch["encoder_embeds"] = self.rng.standard_normal(
+                (self.batch, cfg.encoder_seq, cfg.d_model)
+            ).astype(np.float32)
+        return batch
+
+    def _device_prefetch(self, batch: dict) -> dict:
+        return {k: jax.device_put(v) for k, v in batch.items()}
+
+    # ---- iteration ----------------------------------------------------
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return next(self._it)
+
+    def stop(self):
+        self._pipe.stop()

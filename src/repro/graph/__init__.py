@@ -1,0 +1,10 @@
+from .csr import CSRGraph, from_edges, to_coo, to_undirected
+from .generate import (planted_partition_graph, random_features, rmat_graph,
+                       train_val_test_split)
+from .datasets import GraphDataset, get_dataset, list_datasets
+
+__all__ = [
+    "CSRGraph", "from_edges", "to_coo", "to_undirected",
+    "planted_partition_graph", "random_features", "rmat_graph",
+    "train_val_test_split", "GraphDataset", "get_dataset", "list_datasets",
+]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the GNN hot spots (+ jnp oracles).
+
+Each kernel package has kernel.py (pl.pallas_call + BlockSpec VMEM tiling,
+validated under interpret=True on CPU), ops.py (dispatching wrapper) and
+ref.py (pure-jnp oracle).
+"""
+from .segment_sum.ops import segment_sum
+from .segment_sum.ref import segment_max_ref, segment_sum_ref
+from .gather.ops import gather_rows
+from .edge_softmax.ops import edge_softmax
+
+__all__ = ["segment_sum", "segment_sum_ref", "segment_max_ref",
+           "gather_rows", "edge_softmax"]

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: per-destination edge softmax (GAT), two-phase.
+
+GPU implementations scatter with atomics; the TPU adaptation reuses the
+one-hot-matmul trick from the segment-sum kernel, in two pallas_calls:
+
+  Phase 1 (stats): grid (dst_blocks, edge_blocks), edge axis innermost.
+    For each dst block keep running per-row max ``m`` and, flash-attention
+    style, an *online-rescaled* sum ``s``: when a new edge block raises the
+    max, the old sum is rescaled by exp(m_old - m_new). Both live in VMEM
+    across the edge sweep.
+
+  Phase 2 (normalize): grid (edge_blocks,). Each edge re-reads its dst's
+    (m, s) — a (EB, NB) one-hot matmul against the stats block — and emits
+    exp(score - m)/s. Padded edges emit 0.
+
+Head dim H rides along as the trailing (vector-lane) axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30
+
+
+def _stats_kernel(dst_ref, mask_ref, s_ref, m_out, d_out, *, nb: int):
+    i = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        m_out[...] = jnp.full_like(m_out, _NEG)
+        d_out[...] = jnp.zeros_like(d_out)
+
+    dst = dst_ref[...]                       # (EB,)
+    mask = mask_ref[...]                     # (EB,)
+    sc = s_ref[...]                          # (EB, H)
+    eb = dst.shape[0]
+    rows = i * nb + jax.lax.broadcasted_iota(jnp.int32, (eb, nb), 1)
+    onehot = ((dst[:, None] == rows) & mask[:, None])           # (EB, NB)
+    sc_masked = jnp.where(mask[:, None], sc, _NEG)              # (EB, H)
+    # block max per dst row: (NB, H)
+    contrib = jnp.where(onehot[:, :, None], sc_masked[:, None, :], _NEG)
+    blk_max = contrib.max(axis=0)
+    m_old = m_out[...]
+    m_new = jnp.maximum(m_old, blk_max)
+    scale = jnp.exp(m_old - m_new)                              # (NB, H)
+    ex = jnp.where(onehot[:, :, None],
+                   jnp.exp(sc_masked[:, None, :] - m_new[None]), 0.0)
+    d_out[...] = d_out[...] * scale + ex.sum(axis=0)
+    m_out[...] = m_new
+
+
+def _norm_kernel(dst_ref, mask_ref, s_ref, m_ref, d_ref, out_ref):
+    dst = dst_ref[...]                       # (EB,) global dst ids
+    mask = mask_ref[...]
+    sc = s_ref[...]                          # (EB, H)
+    m = m_ref[dst]                           # (EB, H) gather from full stats
+    d = d_ref[dst]
+    w = jnp.exp(sc - m) / jnp.maximum(d, 1e-30)
+    out_ref[...] = jnp.where(mask[:, None], w, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_dst", "eb", "nb",
+                                             "interpret"))
+def edge_softmax_pallas(scores: jnp.ndarray, edge_dst: jnp.ndarray,
+                        edge_mask: jnp.ndarray, num_dst: int, *,
+                        eb: int = 512, nb: int = 128,
+                        interpret: bool = True) -> jnp.ndarray:
+    e, h = scores.shape
+    eb = min(eb, e)
+    nb = min(nb, num_dst)
+    ep = -(-e // eb) * eb
+    np_ = -(-num_dst // nb) * nb
+    sc = jnp.pad(scores, ((0, ep - e), (0, 0)))
+    dst = jnp.pad(edge_dst.astype(jnp.int32), (0, ep - e), constant_values=-1)
+    mask = jnp.pad(edge_mask.astype(jnp.bool_), (0, ep - e))
+
+    m, d = pl.pallas_call(
+        functools.partial(_stats_kernel, nb=nb),
+        grid=(np_ // nb, ep // eb),
+        in_specs=[
+            pl.BlockSpec((eb,), lambda i, k: (k,)),
+            pl.BlockSpec((eb,), lambda i, k: (k,)),
+            pl.BlockSpec((eb, h), lambda i, k: (k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nb, h), lambda i, k: (i, 0)),
+            pl.BlockSpec((nb, h), lambda i, k: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((np_, h), scores.dtype),
+                   jax.ShapeDtypeStruct((np_, h), scores.dtype)],
+        interpret=interpret,
+    )(dst, mask, sc)
+
+    # phase 2: per-edge normalize; stats stay fully resident (N is the
+    # mini-batch dst count — small), edges stream through in EB blocks.
+    dst_c = jnp.clip(dst, 0, np_ - 1)
+    out = pl.pallas_call(
+        _norm_kernel,
+        grid=(ep // eb,),
+        in_specs=[
+            pl.BlockSpec((eb,), lambda k: (k,)),
+            pl.BlockSpec((eb,), lambda k: (k,)),
+            pl.BlockSpec((eb, h), lambda k: (k, 0)),
+            pl.BlockSpec((np_, h), lambda k: (0, 0)),
+            pl.BlockSpec((np_, h), lambda k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((eb, h), lambda k: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((ep, h), scores.dtype),
+        interpret=interpret,
+    )(dst_c, mask, sc, m, d)
+    return out[:e]

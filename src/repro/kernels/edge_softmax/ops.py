@@ -1,0 +1,21 @@
+"""Public op: per-destination edge softmax with implementation dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import edge_softmax_pallas
+from .ref import edge_softmax_ref
+
+
+def edge_softmax(scores: jnp.ndarray, edge_dst: jnp.ndarray,
+                 edge_mask: jnp.ndarray, num_dst: int,
+                 impl: str = "auto") -> jnp.ndarray:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return edge_softmax_ref(scores, edge_dst, edge_mask, num_dst)
+    if impl == "pallas":
+        return edge_softmax_pallas(scores, edge_dst, edge_mask, num_dst,
+                                   interpret=jax.default_backend() != "tpu")
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for per-destination edge softmax (GAT attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def edge_softmax_ref(scores: jnp.ndarray, edge_dst: jnp.ndarray,
+                     edge_mask: jnp.ndarray, num_dst: int) -> jnp.ndarray:
+    """scores: (E, H); per-dst softmax over incoming edges, masked.
+
+    Padded edges get weight 0. Destinations with no edges produce no
+    contributions anywhere, so their (undefined) softmax never surfaces.
+    """
+    dst = edge_dst.astype(jnp.int32)
+    s = jnp.where(edge_mask[:, None], scores, _NEG)
+    m = jax.ops.segment_max(s, dst, num_segments=num_dst)       # (N, H)
+    m = jnp.where(m <= _NEG / 2, 0.0, m)                        # empty dsts
+    ex = jnp.where(edge_mask[:, None], jnp.exp(s - m[dst]), 0.0)
+    denom = jax.ops.segment_sum(ex, dst, num_segments=num_dst)  # (N, H)
+    denom = jnp.maximum(denom, 1e-30)
+    return ex / denom[dst]

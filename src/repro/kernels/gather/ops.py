@@ -1,0 +1,20 @@
+"""Public op: feature-row gather with implementation dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import gather_rows_pallas
+from .ref import gather_rows_ref
+
+
+def gather_rows(table: jnp.ndarray, idx: jnp.ndarray,
+                impl: str = "auto") -> jnp.ndarray:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return gather_rows_ref(table, idx)
+    if impl == "pallas":
+        return gather_rows_pallas(table, idx,
+                                  interpret=jax.default_backend() != "tpu")
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for feature-row gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_rows_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """table: (V, F); idx: (N,) int32 -> (N, F)."""
+    return table[idx.astype(jnp.int32)]

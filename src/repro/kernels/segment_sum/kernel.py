@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: masked segment-sum (padded-edge GNN aggregation).
+
+TPU adaptation of the scatter-add the paper's GPU backend (cuSPARSE /
+segment reduce) performs: TPUs have no fast scatter, but they have an MXU.
+We therefore express the per-destination reduction as a *one-hot matmul*:
+for a (EB,)-block of edges and an (NB,)-block of destination rows,
+
+    out[NB, FB] += onehot(edge_dst)[EB, NB]^T @ msg[EB, FB]
+
+which runs on the systolic array. The grid is (dst_blocks, feat_blocks,
+edge_blocks) with the edge dimension innermost: TPU grids execute
+sequentially, so the output block stays resident in VMEM across the whole
+edge sweep (standard accumulate-over-last-axis pattern).
+
+Block sizes default to EB=512, NB=128, FB=128 — MXU-aligned (multiples of
+128 in the matmul dims) and a VMEM working set of
+EB*FB (msg) + NB*FB (acc) + EB*NB (onehot) floats ≈ 0.5 MB ≪ 16 MB VMEM.
+
+Padding rows (edge_mask=0) contribute zero columns in the one-hot, so
+padded MFG mini-batches aggregate exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_EB = 512
+DEFAULT_NB = 128
+DEFAULT_FB = 128
+
+
+def _kernel(dst_ref, mask_ref, msg_ref, out_ref, *, nb: int):
+    i = pl.program_id(0)          # dst block
+    k = pl.program_id(2)          # edge block (innermost: accumulation)
+
+    @pl.when(k == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dst = dst_ref[...]            # (EB,) int32
+    mask = mask_ref[...]          # (EB,) bool
+    msg = msg_ref[...]            # (EB, FB)
+    rows = i * nb + jax.lax.broadcasted_iota(jnp.int32, (dst.shape[0], nb), 1)
+    onehot = ((dst[:, None] == rows) & mask[:, None]).astype(msg.dtype)
+    out_ref[...] += jnp.dot(onehot.T, msg,
+                            preferred_element_type=out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_dst", "eb", "nb", "fb",
+                                             "interpret"))
+def segment_sum_pallas(msg: jnp.ndarray, edge_dst: jnp.ndarray,
+                       edge_mask: jnp.ndarray, num_dst: int, *,
+                       eb: int = DEFAULT_EB, nb: int = DEFAULT_NB,
+                       fb: int = DEFAULT_FB, interpret: bool = True
+                       ) -> jnp.ndarray:
+    e, f = msg.shape
+    eb = min(eb, e)
+    nb = min(nb, num_dst)
+    fb = min(fb, f)
+    # pad every axis to its block multiple
+    ep = -(-e // eb) * eb
+    np_ = -(-num_dst // nb) * nb
+    fp = -(-f // fb) * fb
+    msg_p = jnp.pad(msg, ((0, ep - e), (0, fp - f)))
+    dst_p = jnp.pad(edge_dst.astype(jnp.int32), (0, ep - e),
+                    constant_values=-1)
+    mask_p = jnp.pad(edge_mask.astype(jnp.bool_), (0, ep - e))
+
+    grid = (np_ // nb, fp // fb, ep // eb)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nb=nb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((eb,), lambda i, j, k: (k,)),
+            pl.BlockSpec((eb,), lambda i, j, k: (k,)),
+            pl.BlockSpec((eb, fb), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((nb, fb), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, fp), msg.dtype),
+        interpret=interpret,
+    )(dst_p, mask_p, msg_p)
+    return out[:num_dst, :f]

@@ -1,0 +1,30 @@
+"""Public op: masked segment-sum with implementation dispatch.
+
+``impl="auto"`` picks the pure-jnp reference on CPU (XLA's native scatter is
+fine there and Pallas interpret mode is an emulator, not a performance
+path) and the Pallas kernel on TPU. Tests sweep both and assert allclose.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import segment_sum_pallas
+from .ref import segment_sum_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def segment_sum(msg: jnp.ndarray, edge_dst: jnp.ndarray,
+                edge_mask: jnp.ndarray, num_dst: int,
+                impl: str = "auto") -> jnp.ndarray:
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return segment_sum_ref(msg, edge_dst, edge_mask, num_dst)
+    if impl == "pallas":
+        return segment_sum_pallas(msg, edge_dst, edge_mask, num_dst,
+                                  interpret=not _on_tpu())
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for masked segment-sum (GNN neighbor aggregation).
+
+out[d] = sum over edges e with edge_dst[e]==d and edge_mask[e] of msg[e].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(msg: jnp.ndarray, edge_dst: jnp.ndarray,
+                    edge_mask: jnp.ndarray, num_dst: int) -> jnp.ndarray:
+    """msg: (E, F); edge_dst: (E,) int32; edge_mask: (E,) bool -> (num_dst, F)."""
+    msg = jnp.where(edge_mask[:, None], msg, 0)
+    return jax.ops.segment_sum(msg, edge_dst.astype(jnp.int32),
+                               num_segments=num_dst)
+
+
+def segment_max_ref(x: jnp.ndarray, edge_dst: jnp.ndarray,
+                    edge_mask: jnp.ndarray, num_dst: int,
+                    neutral: float = -1e30) -> jnp.ndarray:
+    """x: (E,) -> (num_dst,) per-destination max (masked)."""
+    x = jnp.where(edge_mask, x, neutral)
+    return jax.ops.segment_max(x, edge_dst.astype(jnp.int32),
+                               num_segments=num_dst)

@@ -1,0 +1,419 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) combination against the production mesh, prove memory fit, and
+extract the roofline terms from the compiled artifact.
+
+Run:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 pairs, 1-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Results are appended to benchmarks/results/dryrun.json (resumable).
+"""
+# The VERY FIRST lines — before ANY other import (jax locks the device
+# count on first init): 512 placeholder CPU devices for the 2x16x16 mesh.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCH_IDS, get_config                   # noqa: E402
+from ..models.lm import (abstract_params, make_decode_step,   # noqa: E402
+                         make_prefill_step, make_train_step)
+from ..models.lm.config import LMConfig                       # noqa: E402
+from ..optim import adamw_init                                # noqa: E402
+from ..sharding import AxisRules, param_pspecs, set_rules     # noqa: E402
+from .input_specs import (SHAPES, cache_len_for,              # noqa: E402
+                          effective_window, input_specs)
+from .mesh import make_production_mesh                        # noqa: E402
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__),
+                            "../../../benchmarks/results/dryrun.json")
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],\s{}/#_\.\*=\-]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)\s*,\s*condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:call|closed_call)\(.*?to_apply=%?([\w\.\-]+)")
+_COND_RE = re.compile(
+    r"conditional\(.*?(?:branch_computations=\{([^}]*)\}|"
+    r"true_computation=%?([\w\.\-]+), false_computation=%?([\w\.\-]+))")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+_INSTR_START_RE = re.compile(r"^(?:ROOT\s+)?%?[\w\.\-]+\s*=\s")
+
+
+def _split_computations(hlo_text: str) -> dict:
+    """name -> list of instruction strings (continuation lines merged —
+    the HLO pretty-printer wraps long instructions, putting e.g. the
+    ``condition=``/``body=`` of a while on follow-up lines)."""
+    comps = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not line.startswith(" ") and "->" in line and "{" in line:
+            m = _COMP_HDR_RE.match(stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is None or not stripped or stripped == "}":
+            continue
+        if _INSTR_START_RE.match(stripped) or not comps[cur]:
+            comps[cur].append(stripped)
+        else:
+            comps[cur][-1] += " " + stripped
+    return comps
+
+
+def _line_bytes(result_str: str) -> int:
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(result_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        nbytes += n * _DTYPE_BYTES[dt]
+    return nbytes
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective op, by type,
+    **multiplied by enclosing while-loop trip counts**.
+
+    XLA cost analysis (and a naive text scan) counts a scan body once; with
+    layer stacks scanned, a per-layer all-gather would be undercounted by
+    num_layers. We split the module into computations, walk the call graph
+    from ENTRY through call/closed_call/while/conditional edges, take the
+    largest integer constant in each while's condition region as its trip
+    count, and multiply nested collectives accordingly.
+
+    The post-SPMD module is the per-device program, so shapes are
+    per-device. all-gather results count the *gathered* size (bytes landing
+    in this device's memory ≈ bytes crossing its links in a ring).
+    """
+    comps = _split_computations(hlo_text)
+    if not comps:
+        return {"total": 0, "count": 0}
+
+    # entry = last computation in the module text (XLA convention: ENTRY
+    # last); safer: the one not referenced by anyone
+    referenced = set()
+    edges = {}   # comp -> list of (callee, multiplier)
+    trip_cache = {}
+
+    def trip_count(cond_name: str) -> int:
+        if cond_name not in trip_cache:
+            consts = [int(c) for line in comps.get(cond_name, [])
+                      for c in _CONST_RE.findall(line)]
+            trip_cache[cond_name] = max(consts) if consts else 1
+        return trip_cache[cond_name]
+
+    for name, lines in comps.items():
+        out_edges = []
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                # prefer XLA's own annotation on the while instruction
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else trip_count(cond)
+                out_edges.append((body, trips))
+                referenced.add(body)
+                referenced.add(cond)
+                continue
+            m = _CALL_RE.search(line)
+            if m:
+                out_edges.append((m.group(1), 1))
+                referenced.add(m.group(1))
+                continue
+            m = _COND_RE.search(line)
+            if m:
+                branches = []
+                if m.group(1):
+                    branches = [b.strip().lstrip("%") for b in
+                                m.group(1).split(",")]
+                else:
+                    branches = [m.group(2), m.group(3)]
+                for b in branches:
+                    if b:
+                        out_edges.append((b, 1))
+                        referenced.add(b)
+        edges[name] = out_edges
+
+    entries = [n for n in comps if n not in referenced]
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+
+    seen = set()
+
+    def walk(name: str, mult: int, depth: int = 0):
+        if depth > 64 or (name, mult) in seen:
+            return
+        seen.add((name, mult))
+        for line in comps.get(name, []):
+            m = _COLLECTIVE_RE.search(line)
+            if m and "-done" not in line.split("=")[0]:
+                kind = m.group(2).lower()
+                out[kind] += _line_bytes(m.group(1)) * mult
+                out["count"] += mult
+        for callee, k in edges.get(name, []):
+            walk(callee, mult * k, depth + 1)
+
+    for e in entries:
+        walk(e, 1)
+    out["total"] = sum(out[k] for k in ("all-gather", "all-reduce",
+                                        "reduce-scatter", "all-to-all",
+                                        "collective-permute"))
+    return out
+
+
+def _sharding_tree(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_pspecs(cfg: LMConfig, cache_abs, batch: int, rules: AxisRules):
+    """PartitionSpecs for the serve cache.
+
+    pjit input shardings must divide evenly, so axes are chosen greedily:
+    batch over the batch axes when divisible (else the ring/seq dim over
+    "data"); "model" goes to the kv-head dim when divisible, else to
+    head_dim, else nowhere.
+    """
+    ba = rules.batch_axes
+    m = rules.model_axis
+    dsize = 32 if len(ba) == 2 else 16     # ("pod","data") = 2*16
+    msize = 16
+
+    def div(x, n):
+        return x % n == 0
+
+    def spec_for(path, leaf):
+        name = path[-1] if path else ""
+        shape = leaf.shape
+        nd = len(shape)
+        if name in ("k", "v", "xk", "xv"):
+            # (L|ns, B, W, KV, hd)
+            bspec = ba if div(shape[1], dsize) else None
+            wspec = "data" if bspec is None and div(shape[2], 16) else None
+            kvspec = m if div(shape[3], msize) else None
+            hdspec = m if kvspec is None and div(shape[4], msize) else None
+            return P(None, bspec, wspec, kvspec, hdspec)
+        if name in ("ssm", "tail_ssm"):
+            # (..., B, H, P, N)
+            lead = [None] * (nd - 4)
+            bspec = ba if div(shape[nd - 4], dsize) else None
+            hspec = m if div(shape[nd - 3], msize) else None
+            return P(*lead, bspec, hspec, None, None)
+        if name in ("conv", "tail_conv"):
+            lead = [None] * (nd - 3)
+            bspec = ba if div(shape[nd - 3], dsize) else None
+            return P(*lead, bspec, None, None)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abs)
+    specs = [spec_for([str(getattr(k, "key", k)) for k in path], leaf)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_pspecs(batch_abs, rules: AxisRules):
+    ba = rules.batch_axes
+
+    def spec(leaf):
+        nd = len(leaf.shape)
+        return P(ba, *([None] * (nd - 1)))
+    return jax.tree.map(spec, batch_abs)
+
+
+@dataclasses.dataclass
+class DryRunResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    seconds: float
+    flops_per_device: float = 0.0
+    bytes_per_device: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    memory: dict = dataclasses.field(default_factory=dict)
+    error: str = ""
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            save_hlo: str = "", window_override=None,
+            parallel: str = "tp", microbatches: int = 1,
+            extra_tag: str = "") -> DryRunResult:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if parallel == "fsdp":
+        # §Perf: pure ZeRO-3 data parallelism. Single pod: batch over both
+        # axes, params over both. Multi-pod: batch over (pod,data), params
+        # over all three, remat residuals sequence-sharded over "model".
+        if multi_pod:
+            rules = AxisRules(batch_axes=("pod", "data"), fsdp_axis=None,
+                              seq_shard_activations=True, pure_fsdp=True,
+                              fsdp_param_axes=("pod", "data", "model"))
+        else:
+            rules = AxisRules(batch_axes=("data", "model"), fsdp_axis=None,
+                              seq_shard_activations=False, pure_fsdp=True)
+        extra_tag = extra_tag or "+fsdp"
+    else:
+        rules = AxisRules(
+            batch_axes=("pod", "data") if multi_pod else ("data",),
+            fsdp_axis=("pod", "data") if multi_pod else "data")
+    set_rules(rules)
+    cfg = get_config(arch)
+    w = window_override if window_override is not None else \
+        effective_window(cfg, shape_name)
+    if w is not None:
+        cfg = dataclasses.replace(cfg, sliding_window=w)
+    spec = input_specs(cfg, shape_name)
+    mesh_tag = ("2x16x16" if multi_pod else "16x16") + extra_tag
+
+    try:
+        params_abs = abstract_params(cfg)
+        pspecs = param_pspecs(params_abs, fsdp=cfg.fsdp, rules=rules)
+        psh = _sharding_tree(mesh, pspecs)
+
+        with mesh:
+            if spec["kind"] == "train":
+                from ..optim.optimizers import AdamWState
+                # optimizer moments shard like their parameters
+                osh = AdamWState(
+                    step=NamedSharding(mesh, P()),
+                    mu=_sharding_tree(mesh, pspecs),
+                    nu=_sharding_tree(mesh, pspecs))
+                opt_abs = AdamWState(
+                    step=jax.ShapeDtypeStruct((), jnp.int32),
+                    mu=jax.tree.map(
+                        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32),
+                        params_abs),
+                    nu=jax.tree.map(
+                        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32),
+                        params_abs))
+                bsh = _sharding_tree(mesh, batch_pspecs(spec["batch"], rules))
+                fn = make_train_step(cfg, microbatches=microbatches)
+                jitted = jax.jit(fn, in_shardings=(psh, osh, bsh),
+                                 out_shardings=(psh, osh, None))
+                lowered = jitted.lower(params_abs, opt_abs, spec["batch"])
+            elif spec["kind"] == "prefill":
+                bsh = _sharding_tree(mesh, batch_pspecs(spec["batch"], rules))
+                fn = make_prefill_step(cfg, spec["cache_len"])
+                jitted = jax.jit(fn, in_shardings=(psh, bsh))
+                lowered = jitted.lower(params_abs, spec["batch"])
+            else:  # decode
+                b = SHAPES[shape_name]["batch"]
+                csp = cache_pspecs(cfg, spec["cache"], b, rules)
+                csh = _sharding_tree(mesh, csp)
+                tsh = NamedSharding(mesh, P(rules.batch_axes if b > 1
+                                            else None, None))
+                fn = make_decode_step(cfg)
+                jitted = jax.jit(fn, in_shardings=(psh, csh, tsh),
+                                 out_shardings=(None, csh))
+                lowered = jitted.lower(params_abs, spec["cache"],
+                                       spec["tokens"])
+
+            compiled = lowered.compile()
+
+        cost = compiled.cost_analysis() or {}
+        mem = compiled.memory_analysis()
+        mem_d = {}
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                if hasattr(mem, attr):
+                    mem_d[attr] = int(getattr(mem, attr))
+        hlo = compiled.as_text()
+        coll = collective_bytes_from_hlo(hlo)
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+        res = DryRunResult(
+            arch=arch, shape=shape_name, mesh=mesh_tag, ok=True,
+            seconds=round(time.time() - t0, 1),
+            flops_per_device=float(cost.get("flops", 0.0)),
+            bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+            collectives=coll, memory=mem_d)
+    except Exception as e:   # noqa: BLE001 — report, don't crash the sweep
+        res = DryRunResult(arch=arch, shape=shape_name, mesh=mesh_tag,
+                           ok=False, seconds=round(time.time() - t0, 1),
+                           error=f"{type(e).__name__}: {e}\n"
+                                 f"{traceback.format_exc()[-1500:]}")
+    return res
+
+
+def load_results(path=RESULTS_PATH) -> dict:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_result(res: DryRunResult, path=RESULTS_PATH):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    all_res = load_results(path)
+    all_res[f"{res.arch}|{res.shape}|{res.mesh}"] = res.to_json()
+    with open(path, "w") as f:
+        json.dump(all_res, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args()
+
+    pairs = ([(a, s) for a in ARCH_IDS for s in SHAPES] if args.all
+             else [(args.arch, args.shape)])
+    existing = load_results()
+    for arch, shape in pairs:
+        key = f"{arch}|{shape}|{'2x16x16' if args.multi_pod else '16x16'}"
+        if not args.force and existing.get(key, {}).get("ok"):
+            print(f"[skip cached] {key}")
+            continue
+        print(f"[dryrun] {key} ...", flush=True)
+        res = run_one(arch, shape, multi_pod=args.multi_pod,
+                      save_hlo=args.save_hlo)
+        save_result(res)
+        if res.ok:
+            print(f"  OK in {res.seconds}s  flops/dev={res.flops_per_device:.3e} "
+                  f"bytes/dev={res.bytes_per_device:.3e} "
+                  f"coll={res.collectives.get('total', 0):.3e}B "
+                  f"mem={res.memory}")
+        else:
+            print(f"  FAIL in {res.seconds}s: {res.error.splitlines()[0]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Dry-run of the paper's own GNN train step on the production mesh
+(extra, beyond the 40 assigned pairs — quantifies why DistDGLv2's
+contribution is host-side; see EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m repro.launch.gnn_dryrun [--arch graphsage]
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse            # noqa: E402
+
+import jax                 # noqa: E402
+import jax.numpy as jnp    # noqa: E402
+import numpy as np         # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import get_config                   # noqa: E402
+from ..core.sampler.mfg import capacities          # noqa: E402
+from ..models.gnn import apply_gnn, init_gnn, nc_loss  # noqa: E402
+from ..optim import adamw_init, adamw_update       # noqa: E402
+from .dryrun import collective_bytes_from_hlo      # noqa: E402
+from .mesh import make_production_mesh             # noqa: E402
+
+
+def run(arch: str = "graphsage", trainers: int = 256,
+        multi_pod: bool = False):
+    cfg = get_config(arch)
+    caps = capacities(cfg.batch_size, cfg.fanouts)
+    params = jax.eval_shape(lambda: init_gnn(cfg, jax.random.key(0)))
+    opt = jax.eval_shape(adamw_init, params)
+    t = trainers
+
+    blocks = [dict(edge_src=jax.ShapeDtypeStruct((t, ce), jnp.int32),
+                   edge_dst=jax.ShapeDtypeStruct((t, ce), jnp.int32),
+                   edge_mask=jax.ShapeDtypeStruct((t, ce), jnp.bool_),
+                   edge_types=jax.ShapeDtypeStruct((t, ce), jnp.int32))
+              for _, ce in caps]
+    batch = dict(
+        input_feats=jax.ShapeDtypeStruct((t, caps[0][0], cfg.in_dim),
+                                         jnp.float32),
+        labels=jax.ShapeDtypeStruct((t, cfg.batch_size), jnp.int64),
+        seed_mask=jax.ShapeDtypeStruct((t, cfg.batch_size), jnp.bool_),
+        blocks=blocks)
+
+    def step(params, opt, stacked):
+        def loss_fn(p):
+            return jax.vmap(lambda b: nc_loss(
+                apply_gnn(cfg, p, b), b["labels"], b["seed_mask"]))(
+                    stacked).mean()
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adamw_update(params, grads, opt, lr=1e-3)
+        return params, opt, loss
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh.axis_names
+    bsh = jax.tree.map(
+        lambda l: NamedSharding(mesh, P(axes, *([None] * (len(l.shape) - 1)))),
+        batch)
+    with mesh:
+        c = jax.jit(step, in_shardings=(None, None, bsh),
+                    out_shardings=(None, None, None)).lower(
+                        params, opt, batch).compile()
+    m = c.memory_analysis()
+    coll = collective_bytes_from_hlo(c.as_text())
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    print(f"{arch}: {n_params/1e6:.2f}M params, {t} trainers on "
+          f"{'2x16x16' if multi_pod else '16x16'}")
+    print(f"  temp={m.temp_size_in_bytes/1e9:.2f}GB "
+          f"args={m.argument_size_in_bytes/1e9:.2f}GB")
+    print(f"  collectives={coll['total']/1e6:.2f}MB/step/device "
+          f"(all-reduce={coll['all-reduce']/1e6:.2f}MB)")
+    return coll
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="graphsage",
+                    choices=["graphsage", "gat", "rgcn"])
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    run(args.arch, multi_pod=args.multi_pod)

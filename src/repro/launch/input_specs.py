@@ -1,0 +1,94 @@
+"""ShapeDtypeStruct stand-ins for every (architecture × input shape) pair —
+weak-type-correct, shardable, zero allocation.
+
+Input shapes (assigned):
+    train_4k     seq=4096    global_batch=256   -> train_step
+    prefill_32k  seq=32768   global_batch=32    -> prefill_step
+    decode_32k   seq=32768   global_batch=128   -> serve_step (1 token,
+                                                  KV/SSM cache of seq)
+    long_500k    seq=524288  global_batch=1     -> serve_step; sub-quadratic
+                                                  attention required (dense
+                                                  archs switch to a sliding
+                                                  window; SSM/hybrid native)
+
+For vlm the image patch stub occupies ``num_image_tokens`` of the sequence
+budget; for audio the encoder consumes the stubbed frame embeddings and the
+decoder consumes ``seq`` tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.lm.config import LMConfig
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# sliding window used by quadratic-attention archs on long_500k
+LONG_CONTEXT_WINDOW = 8192
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def needs_window(cfg: LMConfig, shape_name: str) -> bool:
+    """Dense/MoE/VLM/audio attention is quadratic — long_500k runs their
+    sliding-window variant. SSM is attention-free; hybrid's shared
+    attention also gets the window (see DESIGN.md §Arch-applicability)."""
+    return shape_name == "long_500k" and cfg.arch_type != "ssm"
+
+
+def effective_window(cfg: LMConfig, shape_name: str) -> Optional[int]:
+    if needs_window(cfg, shape_name):
+        return LONG_CONTEXT_WINDOW
+    return cfg.sliding_window
+
+
+def cache_len_for(cfg: LMConfig, shape_name: str) -> int:
+    seq = SHAPES[shape_name]["seq"]
+    w = effective_window(cfg, shape_name)
+    return min(seq, w) if w else seq
+
+
+def input_specs(cfg: LMConfig, shape_name: str) -> dict:
+    """Returns {"kind", "args": tuple of pytrees of ShapeDtypeStruct}."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    kind = info["kind"]
+    tok = jnp.int32
+
+    def batch_for(seq_len):
+        batch = {"tokens": sds((b, seq_len), tok)}
+        if cfg.arch_type == "vlm":
+            batch["tokens"] = sds((b, seq_len - cfg.num_image_tokens), tok)
+            batch["image_embeds"] = sds(
+                (b, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.arch_type == "audio":
+            batch["encoder_embeds"] = sds(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        return batch
+
+    if kind == "train":
+        return {"kind": kind, "batch": batch_for(s)}
+    if kind == "prefill":
+        return {"kind": kind, "batch": batch_for(s),
+                "cache_len": cache_len_for(cfg, shape_name)}
+    if kind == "decode":
+        from ..models.lm.decode import init_cache
+        w = cache_len_for(cfg, shape_name)
+        cache = jax.eval_shape(
+            lambda: init_cache(cfg, b, w))
+        return {"kind": kind, "cache": cache,
+                "tokens": sds((b, 1), tok),
+                "cache_len": w}
+    raise ValueError(kind)

@@ -1,0 +1,85 @@
+"""Serving launcher: batched prefill + decode with the ring-buffer cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    from ..configs import get_config, smoke_variant
+    from ..models.lm import init_params, make_decode_step, make_prefill_step
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    cache_len = args.cache_len or (args.prompt_len + args.gen + 8)
+    rng = np.random.default_rng(0)
+    params = init_params(cfg, jax.random.key(0))
+
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)))}
+    if cfg.arch_type == "vlm":
+        batch["image_embeds"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.num_image_tokens, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+        cache_len += cfg.num_image_tokens
+    if cfg.arch_type == "audio":
+        batch["encoder_embeds"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.encoder_seq, cfg.d_model)), jnp.dtype(cfg.dtype))
+
+    prefill = jax.jit(make_prefill_step(cfg, cache_len))
+    decode = jax.jit(make_decode_step(cfg))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    key = jax.random.key(1)
+
+    def sample(logits, key):
+        logits = logits[:, :cfg.vocab_size]
+        if args.temperature <= 0:
+            return logits.argmax(-1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / args.temperature)[:, None].astype(jnp.int32)
+
+    tok = sample(logits, key)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        key, sub = jax.random.split(key)
+        logits, cache = decode(params, cache, tok)
+        tok = sample(logits, sub)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_dec = time.time() - t0
+    gen = np.concatenate([np.asarray(t) for t in out], axis=1)
+    print(f"[prefill] {args.batch}x{args.prompt_len} in {t_prefill:.2f}s")
+    print(f"[decode]  {args.gen - 1} steps in {t_dec:.2f}s "
+          f"({args.batch * (args.gen - 1) / max(t_dec, 1e-9):.1f} tok/s)")
+    print("[sample generations]")
+    for row in gen[:2]:
+        print("  ", row[:24].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from .models import (GNNConfig, apply_gnn, init_gnn, lp_loss, nc_accuracy,
+                     nc_loss)
+from .layers import gat_layer, rgcn_layer, sage_layer
+
+__all__ = ["GNNConfig", "apply_gnn", "init_gnn", "lp_loss", "nc_accuracy",
+           "nc_loss", "gat_layer", "rgcn_layer", "sage_layer"]

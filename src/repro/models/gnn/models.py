@@ -1,0 +1,153 @@
+"""GNN models on padded MFG mini-batches: GraphSAGE, GAT, RGCN (the paper's
+three benchmark models, §6), with node-classification and link-prediction
+heads.
+
+Models are functional: ``init(rng) -> params`` and
+``apply(params, batch) -> logits``. ``batch`` is the device dict produced by
+the pipeline's device-prefetch stage:
+
+    {"input_feats": (cap_src_0, F), "blocks": [block dicts...],
+     "labels": (B,), "seed_mask": (B,)}
+
+The static per-layer dst capacities come from the sampler's ``capacities``
+(batch_size, fanouts) — the same numbers the padding used.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.sampler.mfg import capacities
+from .layers import gat_layer, rgcn_layer, sage_layer
+
+
+def _glorot(rng, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = np.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(rng, shape, jnp.float32, -lim, lim)
+
+
+@dataclasses.dataclass
+class GNNConfig:
+    arch: str                       # graphsage | gat | rgcn
+    in_dim: int
+    hidden_dim: int
+    num_classes: int
+    fanouts: Sequence[int]          # input-layer first
+    batch_size: int
+    num_heads: int = 2              # GAT (paper: 2 heads)
+    num_rels: int = 1               # RGCN
+    impl: str = "auto"              # kernel dispatch
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.fanouts)
+
+    def dst_caps(self) -> List[int]:
+        """Static dst-node capacity per layer (input-layer first)."""
+        caps = capacities(self.batch_size, self.fanouts)
+        dst = [c[0] for c in caps[1:]] + [self.batch_size]
+        return dst
+
+
+def init_gnn(cfg: GNNConfig, rng: jax.Array) -> dict:
+    keys = jax.random.split(rng, cfg.num_layers * 4 + 1)
+    layers = []
+    d_in = cfg.in_dim
+    for l in range(cfg.num_layers):
+        last = l == cfg.num_layers - 1
+        d_out = cfg.num_classes if last else cfg.hidden_dim
+        k = keys[4 * l: 4 * l + 4]
+        if cfg.arch == "graphsage":
+            layers.append({
+                "w_self": _glorot(k[0], (d_in, d_out)),
+                "w_neigh": _glorot(k[1], (d_in, d_out)),
+                "b": jnp.zeros((d_out,)),
+            })
+            d_in = d_out
+        elif cfg.arch == "gat":
+            d_h = max(d_out // cfg.num_heads, 1)
+            layers.append({
+                "w": _glorot(k[0], (d_in, cfg.num_heads, d_h)),
+                "a_l": _glorot(k[1], (cfg.num_heads, d_h)),
+                "a_r": _glorot(k[2], (cfg.num_heads, d_h)),
+                "b": jnp.zeros((cfg.num_heads * d_h,)),
+            })
+            d_in = cfg.num_heads * d_h
+        elif cfg.arch == "rgcn":
+            layers.append({
+                "w_rel": _glorot(k[0], (cfg.num_rels, d_in, d_out)) /
+                         np.sqrt(cfg.num_rels),
+                "w_self": _glorot(k[1], (d_in, d_out)),
+                "b": jnp.zeros((d_out,)),
+            })
+            d_in = d_out
+        else:
+            raise ValueError(cfg.arch)
+    params = {"layers": layers}
+    if cfg.arch == "gat" and d_in != cfg.num_classes:
+        params["head"] = _glorot(keys[-1], (d_in, cfg.num_classes))
+    return params
+
+
+def apply_gnn(cfg: GNNConfig, params: dict, batch: dict) -> jnp.ndarray:
+    """Forward pass -> (batch_size, num_classes) logits."""
+    h = batch["input_feats"]
+    dst_caps = cfg.dst_caps()
+    for l, block in enumerate(batch["blocks"]):
+        p = params["layers"][l]
+        num_dst = dst_caps[l]
+        last = l == cfg.num_layers - 1
+        act = None if last and cfg.arch != "gat" else (
+            jax.nn.elu if cfg.arch == "gat" else jax.nn.relu)
+        if cfg.arch == "graphsage":
+            h = sage_layer(p, h, block, num_dst, activation=act, impl=cfg.impl)
+        elif cfg.arch == "gat":
+            h = gat_layer(p, h, block, num_dst,
+                          activation=None if last else jax.nn.elu,
+                          impl=cfg.impl)
+        elif cfg.arch == "rgcn":
+            h = rgcn_layer(p, h, block, num_dst, cfg.num_rels,
+                           activation=act, impl=cfg.impl)
+    if "head" in params:
+        h = h @ params["head"]
+    return h
+
+
+# ---------------------------------------------------------------------------
+# heads / losses
+# ---------------------------------------------------------------------------
+
+def nc_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+            seed_mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked cross-entropy over real (non-padded) seeds."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    m = seed_mask.astype(jnp.float32)
+    return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def nc_accuracy(logits: jnp.ndarray, labels: jnp.ndarray,
+                seed_mask: jnp.ndarray) -> jnp.ndarray:
+    pred = logits.argmax(axis=-1)
+    m = seed_mask.astype(jnp.float32)
+    return ((pred == labels) * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def lp_loss(h: jnp.ndarray, pos_u: jnp.ndarray, pos_v: jnp.ndarray,
+            neg_v: jnp.ndarray, pair_mask: jnp.ndarray) -> jnp.ndarray:
+    """Link-prediction BCE: dot-product scores, uniform negatives.
+
+    h: (N, d) output embeddings; pos_u/pos_v: (P,) indices into h;
+    neg_v: (P, K) negatives per positive pair.
+    """
+    pos = jnp.einsum("pd,pd->p", h[pos_u], h[pos_v])
+    neg = jnp.einsum("pd,pkd->pk", h[pos_u], h[neg_v])
+    m = pair_mask.astype(jnp.float32)
+    pos_l = jax.nn.softplus(-pos) * m
+    neg_l = (jax.nn.softplus(neg) * m[:, None]).mean(axis=1)
+    return (pos_l + neg_l).sum() / jnp.maximum(m.sum(), 1.0)

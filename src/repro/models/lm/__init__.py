@@ -1,0 +1,11 @@
+from .config import LMConfig
+from .model import abstract_params, forward, init_params
+from .decode import decode_step, init_cache, prefill
+from .steps import (init_train_state, lm_loss, make_decode_step,
+                    make_prefill_step, make_train_step)
+
+__all__ = [
+    "LMConfig", "abstract_params", "forward", "init_params", "decode_step",
+    "init_cache", "prefill", "init_train_state", "lm_loss",
+    "make_decode_step", "make_prefill_step", "make_train_step",
+]

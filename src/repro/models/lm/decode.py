@@ -1,0 +1,309 @@
+"""Serving path: cache init, prefill, and single-token decode for every
+architecture family.
+
+Caches are ring buffers of length ``cache_len`` (== sliding window for
+windowed configs, == max_seq for full attention). SSM/hybrid archs carry
+O(1) recurrent state instead of (or in addition to) KV rings — that is why
+they run the long_500k shape natively.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import LMConfig
+from .layers import (attention, cache_update, decode_attention, mlp_block,
+                     project_kv, project_q, rmsnorm)
+from .moe import moe_block
+from .ssm import mamba2_block
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, cache_len: int,
+               encoder_seq: Optional[int] = None) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    at = cfg.arch_type
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    if at in ("dense", "moe", "vlm"):
+        shp = (cfg.num_layers, batch, cache_len, kv, hd)
+        cache["k"] = jnp.zeros(shp, dtype)
+        cache["v"] = jnp.zeros(shp, dtype)
+    elif at == "ssm":
+        cache["ssm"] = jnp.zeros((cfg.num_layers, batch, cfg.ssm_heads,
+                                  cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        cache["conv"] = jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv - 1,
+                                   cfg.ssm_d_inner + 2 * cfg.ssm_state), dtype)
+    elif at == "hybrid":
+        ke = cfg.hybrid_attn_every
+        ns = cfg.num_layers // ke
+        nt = cfg.num_layers - ns * ke
+        conv_c = cfg.ssm_d_inner + 2 * cfg.ssm_state
+        cache["ssm"] = jnp.zeros((ns, ke, batch, cfg.ssm_heads,
+                                  cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        cache["conv"] = jnp.zeros((ns, ke, batch, cfg.ssm_conv - 1, conv_c),
+                                  dtype)
+        cache["k"] = jnp.zeros((ns, batch, cache_len, kv, hd), dtype)
+        cache["v"] = jnp.zeros((ns, batch, cache_len, kv, hd), dtype)
+        if nt:
+            cache["tail_ssm"] = jnp.zeros(
+                (nt, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32)
+            cache["tail_conv"] = jnp.zeros((nt, batch, cfg.ssm_conv - 1,
+                                            conv_c), dtype)
+    elif at == "audio":
+        enc_s = encoder_seq or cfg.encoder_seq
+        shp = (cfg.num_layers, batch, cache_len, kv, hd)
+        cache["k"] = jnp.zeros(shp, dtype)
+        cache["v"] = jnp.zeros(shp, dtype)
+        cache["xk"] = jnp.zeros((cfg.num_layers, batch, enc_s, kv, hd), dtype)
+        cache["xv"] = jnp.zeros((cfg.num_layers, batch, enc_s, kv, hd), dtype)
+    else:
+        raise ValueError(at)
+    return cache
+
+
+def _ring_fill(k_seq: jnp.ndarray, cache_len: int) -> jnp.ndarray:
+    """(B, S, KV, hd) per-position k/v -> ring cache (B, W, KV, hd)."""
+    b, s = k_seq.shape[:2]
+    w = cache_len
+    if s <= w:
+        pad = jnp.zeros((b, w - s) + k_seq.shape[2:], k_seq.dtype)
+        return jnp.concatenate([k_seq, pad], axis=1)
+    # keep last w positions, scatter to slot = pos % w
+    tail = k_seq[:, s - w:]                       # positions s-w .. s-1
+    slots = (jnp.arange(s - w, s)) % w
+    out = jnp.zeros((b, w) + k_seq.shape[2:], k_seq.dtype)
+    return out.at[:, slots].set(tail)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: LMConfig, params: dict, tokens: jnp.ndarray,
+            cache_len: int, *, image_embeds=None, encoder_embeds=None,
+            window: Optional[int] = None) -> tuple[jnp.ndarray, dict]:
+    """Run the full prompt, build the serve cache.
+    Returns (last-position logits (B, V), cache)."""
+    window = window if window is not None else cfg.sliding_window
+    x = params["embed"][tokens]
+    if cfg.arch_type == "vlm":
+        x = jnp.concatenate([image_embeds.astype(x.dtype), x], axis=1)
+    b, s, d = x.shape
+    positions = jnp.arange(s)
+    at = cfg.arch_type
+    cache = init_cache(cfg, b, cache_len,
+                       encoder_seq=None if encoder_embeds is None
+                       else encoder_embeds.shape[1])
+
+    if at in ("dense", "moe", "vlm"):
+        def body(h, bp):
+            hn = rmsnorm(h, bp["ln1"], cfg.norm_eps)
+            q = project_q(bp["attn"], hn, cfg, positions)
+            k, v = project_kv(bp["attn"], hn, cfg, positions)
+            o = attention(q, k, v, causal=True, window=window,
+                          chunk=cfg.attn_chunk)
+            h = h + o.reshape(b, s, -1) @ bp["attn"]["wo"]
+            if "moe" in bp:
+                ff, _ = moe_block(bp["moe"], rmsnorm(h, bp["ln2"], cfg.norm_eps), cfg)
+            else:
+                ff = mlp_block(bp["mlp"], rmsnorm(h, bp["ln2"], cfg.norm_eps))
+            return h + ff, (_ring_fill(k, cache_len), _ring_fill(v, cache_len))
+        x, (kc, vc) = jax.lax.scan(body, x, params["blocks"])
+        cache["k"], cache["v"] = kc, vc
+
+    elif at == "ssm":
+        def body(h, bp):
+            out, S, conv = mamba2_block(bp["mamba"],
+                                        rmsnorm(h, bp["ln1"], cfg.norm_eps), cfg)
+            return h + out, (S, conv)
+        x, (ss, cs) = jax.lax.scan(body, x, params["blocks"])
+        cache["ssm"], cache["conv"] = ss, cs
+
+    elif at == "hybrid":
+        shared = params["shared"]
+
+        def inner(h, bp):
+            out, S, conv = mamba2_block(bp["mamba"],
+                                        rmsnorm(h, bp["ln1"], cfg.norm_eps), cfg)
+            return h + out, (S, conv)
+
+        def super_body(h, sbp):
+            h, (S, conv) = jax.lax.scan(inner, h, sbp)
+            hn = rmsnorm(h, shared["ln_a"], cfg.norm_eps)
+            q = project_q(shared["attn"], hn, cfg, positions)
+            k, v = project_kv(shared["attn"], hn, cfg, positions)
+            o = attention(q, k, v, causal=True, window=window,
+                          chunk=cfg.attn_chunk)
+            h = h + o.reshape(b, s, -1) @ shared["attn"]["wo"]
+            h = h + mlp_block(shared["mlp"],
+                              rmsnorm(h, shared["ln_m"], cfg.norm_eps))
+            return h, (S, conv, _ring_fill(k, cache_len),
+                       _ring_fill(v, cache_len))
+        x, (ss, cs, kc, vc) = jax.lax.scan(super_body, x, params["blocks"])
+        cache["ssm"], cache["conv"] = ss, cs
+        cache["k"], cache["v"] = kc, vc
+        if "tail_blocks" in params:
+            x, (ts, tc) = jax.lax.scan(inner, x, params["tail_blocks"])
+            cache["tail_ssm"], cache["tail_conv"] = ts, tc
+
+    elif at == "audio":
+        enc = encoder_embeds.astype(x.dtype)
+        enc_pos = jnp.arange(enc.shape[1])
+
+        def enc_body(h, bp):
+            hn = rmsnorm(h, bp["ln1"], cfg.norm_eps)
+            q = project_q(bp["attn"], hn, cfg, enc_pos)
+            k, v = project_kv(bp["attn"], hn, cfg, enc_pos)
+            o = attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+            h = h + o.reshape(h.shape[0], h.shape[1], -1) @ bp["attn"]["wo"]
+            h = h + mlp_block(bp["mlp"], rmsnorm(h, bp["ln2"], cfg.norm_eps),
+                              kind="gelu")
+            return h, None
+        enc, _ = jax.lax.scan(enc_body, enc, params["enc_blocks"])
+        enc = rmsnorm(enc, params["enc_norm"], cfg.norm_eps)
+
+        def dec_body(h, bp):
+            hn = rmsnorm(h, bp["ln1"], cfg.norm_eps)
+            q = project_q(bp["attn"], hn, cfg, positions)
+            k, v = project_kv(bp["attn"], hn, cfg, positions)
+            o = attention(q, k, v, causal=True, window=window,
+                          chunk=cfg.attn_chunk)
+            h = h + o.reshape(b, s, -1) @ bp["attn"]["wo"]
+            hx = rmsnorm(h, bp["ln_x"], cfg.norm_eps)
+            qx = project_q(bp["xattn"], hx, cfg, positions, use_rope=False)
+            xk, xv = project_kv(bp["xattn"], enc, cfg, enc_pos, use_rope=False)
+            ox = attention(qx, xk, xv, causal=False, chunk=cfg.attn_chunk)
+            h = h + ox.reshape(b, s, -1) @ bp["xattn"]["wo"]
+            h = h + mlp_block(bp["mlp"], rmsnorm(h, bp["ln2"], cfg.norm_eps),
+                              kind="gelu")
+            return h, (_ring_fill(k, cache_len), _ring_fill(v, cache_len),
+                       xk, xv)
+        x, (kc, vc, xk, xv) = jax.lax.scan(dec_body, x, params["blocks"])
+        cache["k"], cache["v"] = kc, vc
+        cache["xk"], cache["xv"] = xk, xv
+    else:
+        raise ValueError(at)
+
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ head)[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# decode (one token)
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: LMConfig, params: dict, cache: dict,
+                tokens: jnp.ndarray, *, window: Optional[int] = None
+                ) -> tuple[jnp.ndarray, dict]:
+    """tokens: (B, 1) the token generated at position cache['pos'].
+    Returns (logits (B, V) for the next position, updated cache)."""
+    window = window if window is not None else cfg.sliding_window
+    pos = cache["pos"]
+    x = params["embed"][tokens]                     # (B, 1, d)
+    b = x.shape[0]
+    positions = jnp.full((1,), pos)
+    at = cfg.arch_type
+    new_cache = dict(cache)
+
+    def attn_decode(ap, h, kc, vc):
+        hn = h
+        q = project_q(ap, hn, cfg, positions)
+        k, v = project_kv(ap, hn, cfg, positions)
+        kc, vc = cache_update(kc, vc, k, v, pos)
+        o = decode_attention(q, kc, vc, pos, window=window)
+        return o.reshape(b, 1, -1) @ ap["wo"], kc, vc
+
+    if at in ("dense", "moe", "vlm"):
+        def body(h, xs):
+            bp, kc, vc = xs
+            o, kc, vc = attn_decode(bp["attn"],
+                                    rmsnorm(h, bp["ln1"], cfg.norm_eps),
+                                    kc, vc)
+            h = h + o
+            if "moe" in bp:
+                ff, _ = moe_block(bp["moe"],
+                                  rmsnorm(h, bp["ln2"], cfg.norm_eps), cfg)
+            else:
+                ff = mlp_block(bp["mlp"], rmsnorm(h, bp["ln2"], cfg.norm_eps))
+            return h + ff, (kc, vc)
+        x, (kc, vc) = jax.lax.scan(body, x,
+                                   (params["blocks"], cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = kc, vc
+
+    elif at == "ssm":
+        def body(h, xs):
+            bp, S, conv = xs
+            out, S, conv = mamba2_block(bp["mamba"],
+                                        rmsnorm(h, bp["ln1"], cfg.norm_eps),
+                                        cfg, ssm_state=S, conv_state=conv,
+                                        decode=True)
+            return h + out, (S, conv)
+        x, (ss, cs) = jax.lax.scan(body, x, (params["blocks"], cache["ssm"],
+                                             cache["conv"]))
+        new_cache["ssm"], new_cache["conv"] = ss, cs
+
+    elif at == "hybrid":
+        shared = params["shared"]
+
+        def inner(h, xs):
+            bp, S, conv = xs
+            out, S, conv = mamba2_block(bp["mamba"],
+                                        rmsnorm(h, bp["ln1"], cfg.norm_eps),
+                                        cfg, ssm_state=S, conv_state=conv,
+                                        decode=True)
+            return h + out, (S, conv)
+
+        def super_body(h, xs):
+            sbp, S, conv, kc, vc = xs
+            h, (S, conv) = jax.lax.scan(inner, h, (sbp, S, conv))
+            o, kc, vc = attn_decode(shared["attn"],
+                                    rmsnorm(h, shared["ln_a"], cfg.norm_eps),
+                                    kc, vc)
+            h = h + o
+            h = h + mlp_block(shared["mlp"],
+                              rmsnorm(h, shared["ln_m"], cfg.norm_eps))
+            return h, (S, conv, kc, vc)
+        x, (ss, cs, kc, vc) = jax.lax.scan(
+            super_body, x, (params["blocks"], cache["ssm"], cache["conv"],
+                            cache["k"], cache["v"]))
+        new_cache.update(ssm=ss, conv=cs, k=kc, v=vc)
+        if "tail_blocks" in params:
+            x, (ts, tc) = jax.lax.scan(
+                inner, x, (params["tail_blocks"], cache["tail_ssm"],
+                           cache["tail_conv"]))
+            new_cache["tail_ssm"], new_cache["tail_conv"] = ts, tc
+
+    elif at == "audio":
+        def body(h, xs):
+            bp, kc, vc, xk, xv = xs
+            o, kc, vc = attn_decode(bp["attn"],
+                                    rmsnorm(h, bp["ln1"], cfg.norm_eps),
+                                    kc, vc)
+            h = h + o
+            hx = rmsnorm(h, bp["ln_x"], cfg.norm_eps)
+            qx = project_q(bp["xattn"], hx, cfg, positions, use_rope=False)
+            sc = attention(qx, xk, xv, causal=False, chunk=1)
+            h = h + sc.reshape(b, 1, -1) @ bp["xattn"]["wo"]
+            h = h + mlp_block(bp["mlp"], rmsnorm(h, bp["ln2"], cfg.norm_eps),
+                              kind="gelu")
+            return h, (kc, vc)
+        x, (kc, vc) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
+                                             cache["v"], cache["xk"],
+                                             cache["xv"]))
+        new_cache["k"], new_cache["v"] = kc, vc
+    else:
+        raise ValueError(at)
+
+    new_cache["pos"] = pos + 1
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ head)[:, 0], new_cache

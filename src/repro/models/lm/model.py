@@ -1,0 +1,342 @@
+"""Model zoo: parameter init + forward/prefill/decode for every assigned
+architecture family.
+
+Layer stacks are ``lax.scan``-ed over stacked parameters (HLO size is
+depth-independent — both a compile-feasibility requirement on this box and
+the production-sane choice). Hybrid (Zamba2-style) models scan over
+"super-blocks" of ``hybrid_attn_every`` Mamba2 layers followed by one
+*shared-weight* attention+MLP block (shared = the same parameters at every
+site, as in Zamba).
+
+Caches (serve path) are ring buffers of length ``cache_len`` (== window for
+sliding-window configs); see layers.decode_attention for slot semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...sharding import batch_spec, maybe_constrain
+from jax.sharding import PartitionSpec as P
+from .config import LMConfig
+from .layers import (attn_block, attention, cache_update, decode_attention,
+                     mlp_block, project_kv, project_q, rmsnorm)
+from .moe import moe_block
+from .ssm import mamba2_block
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale or 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _attn_params(cfg: LMConfig, key, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h * hd), dtype),
+        "wk": _dense_init(ks[1], (d, kv * hd), dtype),
+        "wv": _dense_init(ks[2], (d, kv * hd), dtype),
+        "wo": _dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _mlp_params(cfg: LMConfig, key, dtype, kind="swiglu"):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        # gate|up fused on a leading size-2 axis: one matmul from the shared
+        # input -> one dX in backward instead of two partial dXs that GSPMD
+        # must all-reduce separately (§Perf iteration: -1.07GB f32/layer);
+        # slicing stays shard-local because ff (not 2ff) carries "model"
+        return {"w_gateup": _dense_init(ks[0], (d, 2, f), dtype),
+                "w_down": _dense_init(ks[2], (f, d), dtype)}
+    return {"w_up": _dense_init(ks[0], (d, f), dtype),
+            "b_up": jnp.zeros((f,), dtype),
+            "w_down": _dense_init(ks[1], (f, d), dtype),
+            "b_down": jnp.zeros((d,), dtype)}
+
+
+def _moe_params(cfg: LMConfig, key, dtype):
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    return {"router": _dense_init(ks[0], (d, e), jnp.float32),
+            "experts_gate": _dense_init(ks[1], (e, d, f), dtype),
+            "experts_up": _dense_init(ks[2], (e, d, f), dtype),
+            "experts_down": _dense_init(ks[3], (e, f, d), dtype)}
+
+
+def _mamba_params(cfg: LMConfig, key, dtype):
+    d, di, n, h = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 5)
+    cs = 1.0 / np.sqrt(cfg.ssm_conv)
+    return {
+        # z|x inner projection: channel-sharded (tensor parallel)
+        "in_proj": _dense_init(ks[0], (d, 2 * di), dtype),
+        # B|C|dt projection: small, replicated (see ssm.py TP notes)
+        "bc_proj": _dense_init(ks[1], (d, 2 * n + h), dtype),
+        "conv_w": _dense_init(ks[2], (cfg.ssm_conv, di), dtype, scale=cs),
+        "conv_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": _dense_init(ks[3], (cfg.ssm_conv, 2 * n), dtype,
+                                 scale=cs),
+        "conv_bc_b": jnp.zeros((2 * n,), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),     # A = -exp(0) = -1
+        "D": jnp.ones((h,), dtype),
+        "out_proj": _dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: LMConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.padded_vocab
+    params = {"embed": _dense_init(keys[0], (v, d), dtype, scale=0.02 * np.sqrt(d)),
+              "final_norm": jnp.ones((d,), dtype)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(keys[1], (d, v), dtype)
+
+    at = cfg.arch_type
+    if at in ("dense", "vlm", "moe"):
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            blk = {"ln1": jnp.ones((d,), dtype), "ln2": jnp.ones((d,), dtype),
+                   "attn": _attn_params(cfg, k1, dtype)}
+            if at == "moe":
+                blk["moe"] = _moe_params(cfg, k2, dtype)
+            else:
+                blk["mlp"] = _mlp_params(cfg, k2, dtype)
+            return blk
+        params["blocks"] = _stack_init(one, keys[2], cfg.num_layers)
+
+    elif at == "ssm":
+        def one(k):
+            return {"ln1": jnp.ones((d,), dtype),
+                    "mamba": _mamba_params(cfg, k, dtype)}
+        params["blocks"] = _stack_init(one, keys[2], cfg.num_layers)
+
+    elif at == "hybrid":
+        k_every = cfg.hybrid_attn_every
+        n_super = cfg.num_layers // k_every
+        n_tail = cfg.num_layers - n_super * k_every
+
+        def one(k):
+            return {"ln1": jnp.ones((d,), dtype),
+                    "mamba": _mamba_params(cfg, k, dtype)}
+        def super_init(k):
+            return _stack_init(one, k, k_every)
+        params["blocks"] = _stack_init(super_init, keys[2], n_super)
+        if n_tail:
+            params["tail_blocks"] = _stack_init(one, keys[3], n_tail)
+        k1, k2 = jax.random.split(keys[4])
+        params["shared"] = {
+            "ln_a": jnp.ones((d,), dtype), "ln_m": jnp.ones((d,), dtype),
+            "attn": _attn_params(cfg, k1, dtype),
+            "mlp": _mlp_params(cfg, k2, dtype),
+        }
+
+    elif at == "audio":   # whisper backbone: encoder + causal decoder
+        def enc_one(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": jnp.ones((d,), dtype), "ln2": jnp.ones((d,), dtype),
+                    "attn": _attn_params(cfg, k1, dtype),
+                    "mlp": _mlp_params(cfg, k2, dtype, kind="gelu")}
+        def dec_one(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"ln1": jnp.ones((d,), dtype),
+                    "ln_x": jnp.ones((d,), dtype),
+                    "ln2": jnp.ones((d,), dtype),
+                    "attn": _attn_params(cfg, k1, dtype),
+                    "xattn": _attn_params(cfg, k2, dtype),
+                    "mlp": _mlp_params(cfg, k3, dtype, kind="gelu")}
+        params["enc_blocks"] = _stack_init(enc_one, keys[2],
+                                           cfg.num_encoder_layers)
+        params["enc_norm"] = jnp.ones((d,), dtype)
+        params["blocks"] = _stack_init(dec_one, keys[3], cfg.num_layers)
+    else:
+        raise ValueError(at)
+    return params
+
+
+def abstract_params(cfg: LMConfig) -> dict:
+    """Shape/dtype skeleton without allocating (for the dry-run)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------------------
+# forward (training / scoring)
+# ---------------------------------------------------------------------------
+
+def _constrain_act(x):
+    """Block-boundary activation sharding.
+
+    Megatron sequence parallelism: the (B, S, D) residual stream is sharded
+    over "model" on the *sequence* dim between blocks (norm/residual are
+    elementwise), so per-layer remat residuals shrink by the model-axis
+    size. GSPMD inserts the all-gather before each block's first matmul and
+    the reduce-scatter after its last — measured 52.6 -> ~4 GB/device on
+    the llama3-8b train step. Falls back to replicated when S doesn't
+    divide (e.g. whisper's 1500-frame encoder, single-token decode).
+    """
+    from ...sharding import current_rules
+    r = current_rules()
+    if (r.seq_shard_activations and x.ndim >= 3
+            and x.shape[1] % r.model_axis_size == 0):
+        return maybe_constrain(x, P(r.batch_axes, r.model_axis, None))
+    return maybe_constrain(x, batch_spec(None, None))
+
+
+def _dense_block(cfg: LMConfig, bp: dict, x, positions, window):
+    # norm outputs are pinned to the sequence-parallel spec so the SP->full
+    # gather crosses in bf16 (GSPMD otherwise placed it around the f32
+    # rmsnorm intermediate: a 2x-bytes f32 boundary, §Perf iteration 2);
+    # sub-block outputs are constrained before the residual add likewise
+    o = attn_block(bp["attn"],
+                   _constrain_act(rmsnorm(x, bp["ln1"], cfg.norm_eps)), cfg,
+                   positions=positions, window=window)
+    h = x + _constrain_act(o)
+    hn = _constrain_act(rmsnorm(h, bp["ln2"], cfg.norm_eps))
+    if "moe" in bp:
+        ff, aux = moe_block(bp["moe"], hn, cfg)
+    else:
+        ff = mlp_block(bp["mlp"], hn, kind="swiglu")
+        aux = jnp.zeros((), jnp.float32)
+    return _constrain_act(h + _constrain_act(ff)), aux
+
+
+def _mamba_layer(cfg: LMConfig, bp: dict, x):
+    out, _, _ = mamba2_block(bp["mamba"],
+                             rmsnorm(x, bp["ln1"], cfg.norm_eps), cfg)
+    return _constrain_act(x + out)
+
+
+def _shared_attn_block(cfg: LMConfig, sp: dict, x, positions, window):
+    h = x + attn_block(sp["attn"], rmsnorm(x, sp["ln_a"], cfg.norm_eps), cfg,
+                       positions=positions, window=window)
+    ff = mlp_block(sp["mlp"], rmsnorm(h, sp["ln_m"], cfg.norm_eps))
+    return _constrain_act(h + ff)
+
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def forward(cfg: LMConfig, params: dict, tokens: jnp.ndarray, *,
+            image_embeds: Optional[jnp.ndarray] = None,
+            encoder_embeds: Optional[jnp.ndarray] = None,
+            window: Optional[int] = None,
+            return_hidden: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S) -> (logits (B, S_total, V), aux_loss).
+
+    ``return_hidden=True`` skips the LM-head matmul and returns the final
+    normed hidden states — the train loss projects chunk-by-chunk so the
+    (B, S, 150k-vocab) logits tensor never materializes in full.
+
+    vlm: image_embeds (B, n_img, d) are prepended (logits cover the full
+    sequence; the loss masks image positions). audio: encoder_embeds
+    (B, S_enc, d) go through the encoder stack, decoder cross-attends.
+    """
+    window = window if window is not None else cfg.sliding_window
+    x = params["embed"][tokens]
+    if cfg.arch_type == "vlm":
+        assert image_embeds is not None
+        x = jnp.concatenate([image_embeds.astype(x.dtype), x], axis=1)
+    x = _constrain_act(x)
+    b, s, d = x.shape
+    positions = jnp.arange(s)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    at = cfg.arch_type
+    if at in ("dense", "vlm", "moe"):
+        def body(carry, bp):
+            h, aux = carry
+            h2, a = _maybe_remat(cfg, functools.partial(
+                _dense_block, cfg))(bp, h, positions, window)
+            return (h2, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                         params["blocks"])
+
+    elif at == "ssm":
+        def body(h, bp):
+            return _maybe_remat(cfg, functools.partial(
+                _mamba_layer, cfg))(bp, h), None
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+
+    elif at == "hybrid":
+        shared = params["shared"]
+
+        def super_body(h, sbp):
+            def inner(hh, bp):
+                return _maybe_remat(cfg, functools.partial(
+                    _mamba_layer, cfg))(bp, hh), None
+            h, _ = jax.lax.scan(inner, h, sbp)
+            h = _maybe_remat(cfg, functools.partial(
+                _shared_attn_block, cfg))(shared, h, positions, window)
+            return h, None
+        x, _ = jax.lax.scan(super_body, x, params["blocks"])
+        if "tail_blocks" in params:
+            def tail(h, bp):
+                return _mamba_layer(cfg, bp, h), None
+            x, _ = jax.lax.scan(tail, x, params["tail_blocks"])
+
+    elif at == "audio":
+        assert encoder_embeds is not None
+        enc = encoder_embeds.astype(x.dtype)
+        enc_pos = jnp.arange(enc.shape[1])
+
+        def enc_body(h, bp):
+            h2 = h + attn_block(bp["attn"],
+                                rmsnorm(h, bp["ln1"], cfg.norm_eps), cfg,
+                                positions=enc_pos, causal=False)
+            h2 = h2 + mlp_block(bp["mlp"],
+                                rmsnorm(h2, bp["ln2"], cfg.norm_eps),
+                                kind="gelu")
+            return _constrain_act(h2), None
+        enc, _ = jax.lax.scan(enc_body, _constrain_act(enc),
+                              params["enc_blocks"])
+        enc = rmsnorm(enc, params["enc_norm"], cfg.norm_eps)
+
+        def dec_body(h, bp):
+            h = h + attn_block(bp["attn"],
+                               rmsnorm(h, bp["ln1"], cfg.norm_eps), cfg,
+                               positions=positions, window=window)
+            h = h + attn_block(bp["xattn"],
+                               rmsnorm(h, bp["ln_x"], cfg.norm_eps), cfg,
+                               positions=positions, context=enc,
+                               context_positions=enc_pos)
+            h = h + mlp_block(bp["mlp"], rmsnorm(h, bp["ln2"], cfg.norm_eps),
+                              kind="gelu")
+            return _constrain_act(h), None
+        x, _ = jax.lax.scan(jax.checkpoint(dec_body) if cfg.remat else dec_body,
+                            x, params["blocks"])
+    else:
+        raise ValueError(at)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    aux = aux_total / max(cfg.num_layers, 1)
+    if return_hidden:
+        return x, aux
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, aux

@@ -1,0 +1,200 @@
+"""Mamba2 SSD (state-space duality) layer [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split into
+chunks of length Q; within a chunk the quadratic "attention-like" form runs
+on the MXU, across chunks a linear recurrence carries the (H, P, N) state.
+We scan over chunks (lax.scan) with a per-chunk checkpoint so activation
+memory is O(Q^2·H/tp) instead of O(L·Q·H) — that is what lets
+long-sequence shapes lower.
+
+Decode is the O(1) recurrent form: S <- exp(dt·A)·S + dt·B⊗x, y = C·S.
+
+Tensor-parallel mapping (the Mamba analogue of Megatron attention): SSD
+heads shard over "model". The z/x inner projection and its depthwise conv
+are channel-sharded; the small B/C/dt projection is kept *separate* and
+replicated — folding it into one matmul (as the single-GPU reference does)
+would make B/C slices cross shard boundaries and force GSPMD gathers of
+the whole conv output.
+
+Scalar-identity A per head, B/C shared across heads (single group), exactly
+Mamba2's default.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ...sharding import current_rules, maybe_constrain
+
+
+def _head_constrain(x):
+    """(..., H, ...) head-sharded activations (heads on axis -2 or -3)."""
+    r = current_rules()
+    h_ax = None if r.pure_fsdp else r.model_axis
+    if x.ndim == 4:      # (b, l, h, p)
+        return maybe_constrain(x, P(r.batch_axes, None, h_ax, None))
+    if x.ndim == 3:      # (b, l, h) or (b, h, p)
+        return maybe_constrain(x, P(r.batch_axes, None, h_ax))
+    return x
+
+
+def _channel_constrain(x):
+    r = current_rules()
+    if x.ndim == 3:      # (b, l, c)
+        return maybe_constrain(
+            x, P(r.batch_axes, None,
+                 None if r.pure_fsdp else r.model_axis))
+    return x
+
+
+def _depthwise_causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                           ) -> jnp.ndarray:
+    """x: (B, L, C); w: (K, C); causal depthwise conv + silu."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, a_log, B, C, D, chunk: int,
+                init_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan.
+
+    x:  (b, l, h, p)   inner activations, heads h, head dim p
+    dt: (b, l, h)      positive step sizes (softplus already applied)
+    a_log: (h,)        A = -exp(a_log) (negative decay rate per head)
+    B, C: (b, l, n)    input/output projections (shared across heads)
+    D:  (h,)           skip connection
+    Returns (y: (b,l,h,p), final_state: (b,h,p,n)).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    lp = x.shape[1]
+    nc = lp // chunk
+    A = -jnp.exp(a_log.astype(jnp.float32))                    # (h,)
+
+    xc = x.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+    Bc = B.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    Cc = C.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    r = current_rules()
+    lmat_spec = P(r.batch_axes, None, None, r.model_axis)
+
+    def step(S, inputs):
+        xq, dtq, Bq, Cq = inputs          # (b,q,h,p), (b,q,h), (b,q,n) x2
+        da = dtq.astype(jnp.float32) * A                        # (b,q,h) <0
+        cs = jnp.cumsum(da, axis=1)                             # (b,q,h)
+        # intra-chunk quadratic form — (b,t,s,h) sharded over heads
+        seg = cs[:, :, None, :] - cs[:, None, :, :]             # (b,t,s,h)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Lmat = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        Lmat = maybe_constrain(Lmat, lmat_spec)
+        G = jnp.einsum("btn,bsn->bts", Cq, Bq)                  # (b,t,s)
+        xdt = _head_constrain(xq * dtq[..., None])              # (b,q,h,p)
+        y = jnp.einsum("bts,btsh,bshp->bthp",
+                       G.astype(jnp.float32), Lmat,
+                       xdt.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        y = y + jnp.einsum("btn,bhpn,bth->bthp",
+                           Cq.astype(jnp.float32), S, jnp.exp(cs))
+        # new state
+        decay_to_end = jnp.exp(cs[:, -1:, :] - cs)              # (b,q,h)
+        S_new = (jnp.exp(cs[:, -1, :])[:, :, None, None] * S
+                 + jnp.einsum("bqn,bqhp,bqh->bhpn",
+                              Bq.astype(jnp.float32),
+                              xdt.astype(jnp.float32), decay_to_end))
+        return S_new, _head_constrain(y.astype(x.dtype))
+
+    S0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state)
+    # checkpoint per chunk: the O(Q^2·H) decay/score buffers are recomputed
+    # in each chunk's backward instead of being stacked as scan residuals
+    # (without this an 81-layer hybrid train step peaks at ~140 GB/device)
+    S_final, ys = jax.lax.scan(jax.checkpoint(step), S0, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, lp, h, p)[:, :l]
+    y = y + x[:, :l] * D[None, None, :, None]
+    return y, S_final
+
+
+def ssd_decode_step(S, x, dt, a_log, B, C, D):
+    """One-token recurrence. x: (b,h,p); dt: (b,h); B,C: (b,n).
+    Returns (y: (b,h,p), S_new: (b,h,p,n))."""
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    a = jnp.exp(dt.astype(jnp.float32) * A)                     # (b,h)
+    dBx = jnp.einsum("bn,bhp,bh->bhpn", B.astype(jnp.float32),
+                     x.astype(jnp.float32), dt.astype(jnp.float32))
+    S_new = a[:, :, None, None] * S + dBx
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), S_new)
+    y = y.astype(x.dtype) + x * D[None, :, None]
+    return y, S_new
+
+
+# ---------------------------------------------------------------------------
+# full mamba2 block (projections + conv + gate)
+# ---------------------------------------------------------------------------
+
+def mamba2_block(p: dict, x: jnp.ndarray, cfg,
+                 ssm_state: Optional[jnp.ndarray] = None,
+                 conv_state: Optional[jnp.ndarray] = None,
+                 decode: bool = False):
+    """x: (B, L, d) (L==1 with decode=True).
+
+    params: in_proj (d, 2*di) [z | x, channel-sharded], bc_proj
+    (d, 2n + h) [B | C | dt, replicated], conv_w (K, di), conv_b (di,),
+    conv_bc_w (K, 2n), conv_bc_b (2n,), dt_bias (h,), a_log (h,), D (h,),
+    out_proj (di, d).
+    Returns (out, new_ssm_state, new_conv_state); conv state layout is
+    (b, K-1, di + 2n) — x channels then B|C.
+    """
+    b, l, d = x.shape
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_head_dim
+    zx = x @ p["in_proj"]                                       # (b,l,2di)
+    zx = _channel_constrain(zx)
+    z, xi_raw = zx[..., :di], zx[..., di:]
+    bcdt = x @ p["bc_proj"]                                     # (b,l,2n+h)
+    bc_raw = bcdt[..., :2 * n]
+    dt_raw = bcdt[..., 2 * n:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])                 # (b,l,h)
+    dt = _head_constrain(dt)
+
+    if decode:
+        k = cfg.ssm_conv
+        hist_x = jnp.concatenate([conv_state[..., :di], xi_raw], axis=1)
+        hist_bc = jnp.concatenate([conv_state[..., di:], bc_raw], axis=1)
+        conv_x = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", hist_x, p["conv_w"]) + p["conv_b"])
+        conv_bc = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", hist_bc, p["conv_bc_w"]) + p["conv_bc_b"])
+        new_conv_state = jnp.concatenate([hist_x[:, 1:], hist_bc[:, 1:]],
+                                         axis=-1)
+        xi = conv_x.reshape(b, h, pdim)
+        Bv, Cv = conv_bc[:, :n], conv_bc[:, n:]
+        y, new_S = ssd_decode_step(ssm_state, xi, dt[:, 0], p["a_log"],
+                                   Bv, Cv, p["D"])
+        y = y.reshape(b, 1, di)
+        out = (y * jax.nn.silu(z)) @ p["out_proj"]
+        return out, new_S, new_conv_state
+
+    conv_x = _depthwise_causal_conv(xi_raw, p["conv_w"], p["conv_b"])
+    conv_bc = _depthwise_causal_conv(bc_raw, p["conv_bc_w"], p["conv_bc_b"])
+    xi = _head_constrain(conv_x.reshape(b, l, h, pdim))
+    Bv, Cv = conv_bc[..., :n], conv_bc[..., n:]
+    y, S_final = ssd_chunked(xi, dt, p["a_log"], Bv, Cv, p["D"],
+                             cfg.ssm_chunk, init_state=ssm_state)
+    y = y.reshape(b, l, di)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    km1 = cfg.ssm_conv - 1
+    raw = jnp.concatenate([xi_raw, bc_raw], axis=-1)
+    new_conv_state = jnp.pad(raw, ((0, 0), (km1, 0), (0, 0)))[:, -km1:, :]
+    return out, S_final, new_conv_state

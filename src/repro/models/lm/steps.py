@@ -1,0 +1,140 @@
+"""Train / serve step functions for the LM zoo (what the launcher lowers).
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+with next-token cross-entropy (+ MoE aux loss), global-norm clipping and
+AdamW. ``batch`` carries "tokens" (B, S) plus per-family extras
+("image_embeds" for vlm, "encoder_embeds" for audio) and a "loss_mask".
+
+``make_prefill_step`` / ``make_decode_step`` wrap decode.prefill /
+decode.decode_step. These are the objects the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ...optim import adamw_init, adamw_update, clip_by_global_norm
+from ...sharding import current_rules, maybe_constrain
+from .config import LMConfig
+from .decode import decode_step, init_cache, prefill
+from .model import forward, init_params
+
+
+def _chunked_ce(hidden: jnp.ndarray, head: jnp.ndarray, tgt: jnp.ndarray,
+                mask: jnp.ndarray, chunk: int = 512) -> jnp.ndarray:
+    """Softmax cross-entropy fused with the head projection, scanned over
+    sequence chunks: the (B, S, vocab) logits tensor never materializes —
+    only a (B, chunk, vocab/model_shards) f32 slice per step. Each chunk is
+    checkpointed so its logits are recomputed (not stored) for backward."""
+    rules = current_rules()
+    b, s, d = hidden.shape
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        tgt = jnp.pad(tgt, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = hidden.shape[1] // chunk
+    hs = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ts = tgt.reshape(b, nc, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    vocab_axis = None if rules.pure_fsdp else rules.model_axis
+
+    @jax.checkpoint
+    def one(hc, tc, mc):
+        logits = (hc @ head).astype(jnp.float32)
+        logits = maybe_constrain(
+            logits, P(rules.batch_axes, None, vocab_axis))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tl = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return ((lse - tl) * mc).sum()
+
+    per_chunk = jax.lax.map(lambda args: one(*args), (hs, ts, ms))
+    return per_chunk.sum()
+
+
+def lm_loss(cfg: LMConfig, params: dict, batch: dict
+            ) -> tuple[jnp.ndarray, dict]:
+    tokens = batch["tokens"]
+    hidden, aux = forward(
+        cfg, params, tokens,
+        image_embeds=batch.get("image_embeds"),
+        encoder_embeds=batch.get("encoder_embeds"),
+        return_hidden=True)
+    # hidden covers [image prefix +] tokens; next-token prediction on text
+    n_img = cfg.num_image_tokens if cfg.arch_type == "vlm" else 0
+    pred_h = hidden[:, n_img:-1]
+    tgt = tokens[:, 1:]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(tgt, jnp.float32) if mask is None \
+        else mask[:, 1:].astype(jnp.float32)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    total = _chunked_ce(pred_h, head, tgt, mask)
+    ce = total / jnp.maximum(mask.sum(), 1.0)
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux,
+                  "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+
+
+def make_train_step(cfg: LMConfig, lr: float = 3e-4, clip: float = 1.0,
+                    weight_decay: float = 0.1, microbatches: int = 1):
+    """``microbatches > 1`` scans over batch slices accumulating gradients
+    (identical math for mean-reduced losses): activation memory scales with
+    tokens per microbatch — the fit lever for the biggest train configs."""
+    def grad_fn(params, batch):
+        return jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, batch), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def body(acc, b):
+                (l, met), g = grad_fn(params, b)
+                acc_g, acc_l = acc
+                return (jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc_g, g),
+                    acc_l + l), met
+            zero = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params),
+                    jnp.zeros((), jnp.float32))
+            (gsum, lsum), mets = jax.lax.scan(body, zero, mb)
+            grads = jax.tree.map(
+                lambda g, p: (g / microbatches).astype(p.dtype), gsum, params)
+            loss = lsum / microbatches
+            metrics = jax.tree.map(lambda m: m.mean(axis=0), mets)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr,
+                                         weight_decay=weight_decay)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: LMConfig, cache_len: int):
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch["tokens"], cache_len,
+                       image_embeds=batch.get("image_embeds"),
+                       encoder_embeds=batch.get("encoder_embeds"))
+    return prefill_step
+
+
+def make_decode_step(cfg: LMConfig):
+    def serve_step(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens)
+    return serve_step
+
+
+def init_train_state(cfg: LMConfig, seed: int = 0):
+    params = init_params(cfg, jax.random.key(seed))
+    return params, adamw_init(params)

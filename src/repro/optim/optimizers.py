@@ -1,0 +1,69 @@
+"""Dense optimizers (pure JAX pytree transforms).
+
+Dense parameters take the all-reduce + optimizer path (§5.6); the sparse
+embedding path is ``core.kvstore.embedding`` (row-sparse Adam at the
+owners). Kept dependency-free (no optax offline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    # moments in f32 regardless of (possibly bf16) param dtype
+    f32_zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(f32_zeros, params),
+                      nu=jax.tree.map(f32_zeros, params))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr: float,
+                 beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.0):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    mu = jax.tree.map(
+        lambda m, g: beta1 * m + (1 - beta1) * g.astype(jnp.float32),
+        state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: beta2 * v + (1 - beta2) *
+        g.astype(jnp.float32) * g.astype(jnp.float32),
+        state.nu, grads)
+    bc1 = 1 - beta1 ** t
+    bc2 = 1 - beta2 ** t
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = lr * (mhat / (jnp.sqrt(vhat) + eps) +
+                      weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def sgd_update(params, grads, *, lr: float, momentum_state=None,
+               momentum: float = 0.0):
+    if momentum and momentum_state is not None:
+        momentum_state = jax.tree.map(lambda b, g: momentum * b + g,
+                                      momentum_state, grads)
+        grads = momentum_state
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads), momentum_state

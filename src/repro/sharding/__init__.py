@@ -1,0 +1,5 @@
+from .rules import (AxisRules, current_rules, maybe_constrain, param_pspecs,
+                    set_rules, batch_spec)
+
+__all__ = ["AxisRules", "current_rules", "maybe_constrain", "param_pspecs",
+           "set_rules", "batch_spec"]

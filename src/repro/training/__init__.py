@@ -1,0 +1,3 @@
+from .trainer import DistGNNTrainer, TrainJobConfig
+
+__all__ = ["DistGNNTrainer", "TrainJobConfig"]

@@ -1,0 +1,199 @@
+"""Distributed synchronous mini-batch GNN training (§5.1, §5.6).
+
+``DistGNNTrainer`` wires the whole DistDGLv2 stack together for a cluster of
+``num_machines × trainers_per_machine`` trainers:
+
+  graph -> hierarchical partition -> KVStore shards -> per-trainer seed
+  split -> per-trainer async sampling pipelines -> one *synchronous* SGD
+  step per iteration across all trainers (data parallelism).
+
+On a real TPU pod each trainer is one chip and the gradient all-reduce is
+GSPMD's; in this one-host harness the T trainers' mini-batches are stacked
+on a leading axis and the step is jitted with that axis sharded over the
+mesh's "data" axis (identical program; with one CPU device the psum
+degenerates but the math — mean gradient over all trainers' batches — is
+exactly synchronous SGD, so convergence behaviour is faithful).
+
+The constructor options are the Fig. 14 ablation axes:
+  partition_method="random"|"metis", use_level2, sync (no pipeline),
+  non_stop (never drain the pipeline between epochs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.kvstore import (DistKVStore, NetworkModel, PartitionPolicy,
+                            Transport)
+from ..core.partition import (hierarchical_partition, locality_report,
+                              split_training_set)
+from ..core.pipeline import MinibatchPipeline
+from ..core.sampler import DistributedSampler
+from ..graph.datasets import GraphDataset
+from ..models.gnn import GNNConfig, apply_gnn, init_gnn, nc_accuracy, nc_loss
+from ..optim import adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainJobConfig:
+    num_machines: int = 2
+    trainers_per_machine: int = 2
+    partition_method: str = "metis"      # "metis" | "random" (Euler baseline)
+    use_level2: bool = True              # 2-level partition seed split
+    sync: bool = False                   # disable the async pipeline
+    non_stop: bool = True                # non-stop pipeline across epochs
+    lr: float = 3e-3
+    network: Optional[NetworkModel] = None
+    pipeline_depths: Optional[dict] = None
+    seed: int = 0
+
+
+class DistGNNTrainer:
+    def __init__(self, ds: GraphDataset, model_cfg: GNNConfig,
+                 job: TrainJobConfig):
+        self.ds = ds
+        self.cfg = model_cfg
+        self.job = job
+        t0 = time.perf_counter()
+        self.hp = hierarchical_partition(
+            ds.graph, job.num_machines, job.trainers_per_machine,
+            split_mask=ds.split_mask, method=job.partition_method,
+            seed=job.seed)
+        self.partition_time_s = time.perf_counter() - t0
+        book = self.hp.book
+
+        # KVStore: features (and labels, so remote trainers pull them too)
+        self.transport = Transport(job.network or NetworkModel())
+        feats_new = ds.feats[book.new2old_node]
+        self.labels_new = ds.labels[book.new2old_node]
+        self.store = DistKVStore(
+            {"node": PartitionPolicy("node", book.node_offsets),
+             "edge": PartitionPolicy("edge", book.edge_offsets)},
+            transport=self.transport)
+        self.store.init_data("feat", feats_new.shape[1:], np.float32, "node",
+                             full_array=feats_new)
+
+        # per-trainer seed split (§5.6.1)
+        train_new = book.old2new_node[ds.train_nids]
+        self.trainer_seeds = split_training_set(
+            self.hp, train_new, use_level2=job.use_level2, seed=job.seed)
+        self.locality = locality_report(self.hp, self.trainer_seeds)
+
+        # per-trainer samplers + pipelines
+        self.num_trainers = self.hp.num_trainers
+        self.samplers: List[DistributedSampler] = []
+        self.pipelines: List[MinibatchPipeline] = []
+        for ti in range(self.num_trainers):
+            machine = ti // job.trainers_per_machine
+            s = DistributedSampler(book, self.hp.partitions, model_cfg.fanouts,
+                                   model_cfg.batch_size, machine=machine,
+                                   transport=self.transport,
+                                   seed=job.seed + 100 + ti)
+            seeds = self.trainer_seeds[ti]
+            p = MinibatchPipeline(
+                s, self.store.client(machine), "feat", seeds,
+                labels=self.labels_new[seeds], sync=job.sync,
+                non_stop=job.non_stop, depths=job.pipeline_depths,
+                to_device=False, seed=job.seed + 200 + ti)
+            self.samplers.append(s)
+            self.pipelines.append(p)
+        self.batches_per_epoch = min(p.batches_per_epoch for p in self.pipelines)
+        if self.batches_per_epoch < 1:
+            raise ValueError(
+                f"batch_size {model_cfg.batch_size} exceeds the per-trainer "
+                f"training-set split ({min(len(s) for s in self.trainer_seeds)} "
+                f"seeds/trainer) — shrink the batch or the trainer count")
+
+        self.params = init_gnn(model_cfg, jax.random.key(job.seed))
+        self.opt = adamw_init(self.params)
+        self._step = self._build_step()
+
+    # ------------------------------------------------------------------
+    def _build_step(self):
+        cfg, lr = self.cfg, self.job.lr
+
+        @jax.jit
+        def step(params, opt, stacked):
+            def loss_one(p, batch):
+                logits = apply_gnn(cfg, p, batch)
+                return (nc_loss(logits, batch["labels"], batch["seed_mask"]),
+                        nc_accuracy(logits, batch["labels"], batch["seed_mask"]))
+
+            def loss_fn(p):
+                losses, accs = jax.vmap(lambda b: loss_one(p, b))(stacked)
+                return losses.mean(), accs.mean()   # sync SGD: mean over trainers
+
+            (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            params2, opt2 = adamw_update(params, grads, opt, lr=lr)
+            return params2, opt2, loss, acc
+        return step
+
+    @staticmethod
+    def _stack(batches: List[dict]) -> dict:
+        def stack_leaf(*xs):
+            return jnp.stack([jnp.asarray(x) for x in xs])
+        return jax.tree.map(stack_leaf, *batches)
+
+    def _device_batch(self, mb) -> dict:
+        return dict(
+            input_feats=mb.input_feats,
+            labels=mb.labels,
+            seed_mask=mb.seed_mask,
+            blocks=[dict(edge_src=b.edge_src, edge_dst=b.edge_dst,
+                         edge_mask=b.edge_mask, edge_types=b.edge_types)
+                    for b in mb.blocks],
+        )
+
+    # ------------------------------------------------------------------
+    def train_epoch(self, epoch: int) -> dict:
+        iters = [p.epoch(epoch) for p in self.pipelines]
+        t0 = time.perf_counter()
+        losses, accs = [], []
+        for _ in range(self.batches_per_epoch):
+            batches = [self._device_batch(next(it)) for it in iters]
+            self.params, self.opt, loss, acc = self._step(
+                self.params, self.opt, self._stack(batches))
+            losses.append(float(loss))
+            accs.append(float(acc))
+        # drain finite iterators (sync / non-non_stop modes)
+        if not (self.pipelines[0].non_stop and not self.job.sync):
+            for it in iters:
+                for _ in it:
+                    pass
+        dt = time.perf_counter() - t0
+        return {"epoch": epoch, "loss": float(np.mean(losses)),
+                "acc": float(np.mean(accs)), "time_s": dt,
+                "batches": self.batches_per_epoch}
+
+    def evaluate(self, nids_old: np.ndarray, max_batches: int = 50) -> float:
+        book = self.hp.book
+        nids = book.old2new_node[np.asarray(nids_old)]
+        sampler = self.samplers[0]
+        client = self.store.client(0)
+        accs = []
+        bs = self.cfg.batch_size
+        for b in range(min(max_batches, len(nids) // bs)):
+            chunk = nids[b * bs:(b + 1) * bs]
+            mb = sampler.sample(chunk, labels=self.labels_new[chunk])
+            mb.input_feats = client.pull("feat", mb.input_gids)
+            logits = apply_gnn(self.cfg, self.params, self._device_batch(mb))
+            accs.append(float(nc_accuracy(logits, jnp.asarray(mb.labels),
+                                          jnp.asarray(mb.seed_mask))))
+        return float(np.mean(accs)) if accs else float("nan")
+
+    def stop(self):
+        for p in self.pipelines:
+            p.stop()
+
+    def sampling_stats(self) -> dict:
+        remote = sum(s.stats.seeds_remote for s in self.samplers)
+        total = sum(s.stats.seeds_total for s in self.samplers)
+        return {"remote_seed_frac": remote / max(total, 1),
+                "transport": self.transport.stats(),
+                "mean_seed_locality": self.locality["mean_local_frac"],
+                "partition_time_s": self.partition_time_s}

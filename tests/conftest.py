@@ -1,0 +1,5 @@
+import os
+import sys
+
+# allow `pytest tests/` from the repo root without PYTHONPATH
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,54 @@
+import numpy as np
+import pytest
+
+from repro.graph import (get_dataset, list_datasets, rmat_graph, to_coo,
+                         to_undirected, planted_partition_graph)
+
+
+def test_rmat_basic():
+    g = rmat_graph(10, edge_factor=8, seed=0)
+    assert g.num_nodes == 1024
+    assert g.num_edges > 1024
+    src, dst = to_coo(g)
+    assert (src < g.num_nodes).all() and (dst < g.num_nodes).all()
+    # power-law-ish: max degree far above mean
+    deg = g.out_degree()
+    assert deg.max() > 10 * deg.mean()
+
+
+def test_undirected_symmetry():
+    g = rmat_graph(8, edge_factor=4, seed=1, undirected=True)
+    src, dst = to_coo(g)
+    fw = set(zip(src.tolist(), dst.tolist()))
+    assert all((d, s) in fw for s, d in fw)
+
+
+def test_subgraph_edges_subset():
+    g = rmat_graph(9, edge_factor=6, seed=2)
+    nodes = np.arange(100, 300)
+    sub, pos = g.subgraph(nodes)
+    assert sub.num_nodes == 200
+    src, dst = to_coo(sub)
+    # every subgraph edge maps to a real original edge
+    osrc, odst = to_coo(g)
+    orig = set(zip(osrc.tolist(), odst.tolist()))
+    for s, d in zip(nodes[src].tolist(), nodes[dst].tolist()):
+        assert (s, d) in orig
+
+
+@pytest.mark.parametrize("name", ["product-sim", "cluster-sim"])
+def test_datasets(name):
+    kw = {"scale": 9} if name == "product-sim" else {"num_nodes": 1500,
+                                                     "num_blocks": 8}
+    ds = get_dataset(name, **kw)
+    n = ds.graph.num_nodes
+    assert ds.feats.shape[0] == n and ds.labels.shape == (n,)
+    assert len(ds.train_nids) > 0
+    assert set(np.unique(ds.split_mask)) <= {0, 1, 2, 3}
+    # splits disjoint by construction of mask
+    assert len(np.intersect1d(ds.train_nids, ds.val_nids)) == 0
+
+
+def test_planted_partition_community_structure():
+    g = planted_partition_graph(2000, 4, p_in=12, p_out=1, seed=0)
+    assert g.num_edges > 2000

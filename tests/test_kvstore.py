@@ -1,0 +1,95 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kvstore import (DistEmbedding, DistKVStore, NetworkModel,
+                                PartitionPolicy, Transport)
+
+
+@pytest.fixture
+def store():
+    pol = PartitionPolicy("node", np.array([0, 10, 25, 40]))
+    s = DistKVStore({"node": pol})
+    full = np.arange(40 * 3, dtype=np.float32).reshape(40, 3)
+    s.init_data("feat", (3,), np.float32, "node", full_array=full)
+    return s, full
+
+
+def test_pull_roundtrip(store):
+    s, full = store
+    c = s.client(1)
+    ids = np.array([0, 5, 12, 24, 39, 12])
+    assert np.allclose(c.pull("feat", ids), full[ids])
+
+
+def test_pull_does_not_alias_source(store):
+    s, full = store
+    full[0] = 999.0            # mutate the caller's array
+    assert not np.allclose(s.client(0).pull("feat", np.array([0]))[0], 999.0)
+
+
+def test_push_sum_and_assign(store):
+    s, full = store
+    c = s.client(0)
+    c.push("feat", np.array([2, 12]), np.full((2, 3), 10, np.float32),
+           reduce="sum")
+    assert np.allclose(s.gather_all("feat")[2], full[2] + 10)
+    c.push("feat", np.array([2]), np.zeros((1, 3), np.float32),
+           reduce="assign")
+    assert np.allclose(s.gather_all("feat")[2], 0.0)
+
+
+def test_transport_accounting(store):
+    s, _ = store
+    s.transport.reset()
+    c = s.client(1)
+    c.pull("feat", np.array([0, 12]))   # one remote row, one local
+    st_ = s.transport.stats()
+    assert st_["remote_bytes"] == 12 and st_["local_bytes"] == 12
+    assert st_["remote_requests"] == 1
+
+
+def test_local_fraction(store):
+    s, _ = store
+    c = s.client(1)
+    assert c.local_fraction("feat", np.array([12, 13, 0, 39])) == 0.5
+
+
+def test_sparse_embedding_updates_only_touched_rows(store):
+    s, _ = store
+    emb = DistEmbedding(s, "emb", 40, 4, "node", seed=0)
+    c = s.client(0)
+    w0 = s.gather_all("emb").copy()
+    emb.push_grad(c, np.array([1, 1, 30]), np.ones((3, 4), np.float32))
+    w1 = s.gather_all("emb")
+    changed = np.nonzero(np.abs(w1 - w0).sum(1) > 0)[0]
+    assert set(changed.tolist()) == {1, 30}
+    # duplicate ids coalesce to a single Adam step for that row
+    assert s.servers[0].local_view("emb__t")[1] == 1
+
+
+def test_sparse_embedding_adam_direction(store):
+    s, _ = store
+    emb = DistEmbedding(s, "e2", 40, 4, "node", seed=1)
+    c = s.client(0)
+    w0 = s.gather_all("e2").copy()
+    emb.push_grad(c, np.array([5]), np.ones((1, 4), np.float32))
+    w1 = s.gather_all("e2")
+    assert (w1[5] < w0[5]).all()       # positive grad -> decrease
+
+
+@settings(max_examples=25, deadline=None)
+@given(ids=st.lists(st.integers(0, 39), min_size=1, max_size=64))
+def test_pull_property(ids):
+    pol = PartitionPolicy("node", np.array([0, 10, 25, 40]))
+    s = DistKVStore({"node": pol})
+    full = np.random.default_rng(0).standard_normal((40, 5)).astype(np.float32)
+    s.init_data("feat", (5,), np.float32, "node", full_array=full)
+    ids = np.array(ids)
+    for m in range(3):
+        assert np.allclose(s.client(m).pull("feat", ids), full[ids])
+
+
+def test_network_model_cost():
+    nm = NetworkModel(latency_s=1e-3, bandwidth_Bps=1e9)
+    assert nm.cost(1e9) == pytest.approx(1.001)

@@ -1,0 +1,114 @@
+"""Per-assigned-architecture smoke tests: REDUCED same-family variants
+(≤3 layers, d_model ≤ 512, ≤4 experts) run one forward + one train step +
+a prefill/decode consistency check on CPU, asserting shapes and no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct —
+no allocation), per the harness contract.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_variant
+from repro.models.lm import (decode_step, forward, init_params,
+                             init_train_state, make_train_step, prefill)
+
+RNG = np.random.default_rng(0)
+B, S = 2, 24
+
+
+def _batch(cfg):
+    batch = {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)))}
+    if cfg.arch_type == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            RNG.standard_normal((B, cfg.num_image_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.arch_type == "audio":
+        batch["encoder_embeds"] = jnp.asarray(
+            RNG.standard_normal((B, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_forward_and_train(arch_id):
+    cfg = smoke_variant(get_config(arch_id))
+    batch = _batch(cfg)
+    params = init_params(cfg, jax.random.key(0))
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          image_embeds=batch.get("image_embeds"),
+                          encoder_embeds=batch.get("encoder_embeds"))
+    exp_s = S + (cfg.num_image_tokens if cfg.arch_type == "vlm" else 0)
+    assert logits.shape == (B, exp_s, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    step = jax.jit(make_train_step(cfg, lr=1e-3))
+    p, opt = init_train_state(cfg)
+    p, opt, m = step(p, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    leaves = jax.tree.leaves(p)
+    assert all(np.isfinite(np.asarray(l, np.float32)).all() for l in leaves)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_decode_matches_forward(arch_id):
+    cfg = smoke_variant(get_config(arch_id))
+    batch = _batch(cfg)
+    params = init_params(cfg, jax.random.key(1))
+    tokens = batch["tokens"]
+    total = S + (cfg.num_image_tokens if cfg.arch_type == "vlm" else 0)
+    _, cache = prefill(cfg, params, tokens, cache_len=total + 8,
+                       image_embeds=batch.get("image_embeds"),
+                       encoder_embeds=batch.get("encoder_embeds"))
+    nxt = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, 1)))
+    dec_logits, _ = decode_step(cfg, params, cache, nxt)
+    ext, _ = forward(cfg, params, jnp.concatenate([tokens, nxt], 1),
+                     image_embeds=batch.get("image_embeds"),
+                     encoder_embeds=batch.get("encoder_embeds"))
+    err = np.abs(np.asarray(dec_logits) - np.asarray(ext)[:, -1]).max()
+    assert err < 5e-3, (arch_id, err)
+
+
+def test_exact_assigned_hyperparameters():
+    """The full configs must carry the exact assignment numbers."""
+    expect = {
+        "zamba2-7b": dict(num_layers=81, d_model=3584, num_heads=32,
+                          num_kv_heads=32, d_ff=14336, vocab_size=32000,
+                          ssm_state=64, arch_type="hybrid"),
+        "qwen3-32b": dict(num_layers=64, d_model=5120, num_heads=64,
+                          num_kv_heads=8, d_ff=25600, vocab_size=151936,
+                          qk_norm=True, arch_type="dense"),
+        "llama3-8b": dict(num_layers=32, d_model=4096, num_heads=32,
+                          num_kv_heads=8, d_ff=14336, vocab_size=128256,
+                          arch_type="dense"),
+        "whisper-base": dict(num_layers=6, d_model=512, num_heads=8,
+                             num_kv_heads=8, d_ff=2048, vocab_size=51865,
+                             arch_type="audio"),
+        "mamba2-2.7b": dict(num_layers=64, d_model=2560, num_heads=0,
+                            d_ff=0, vocab_size=50280, ssm_state=128,
+                            arch_type="ssm"),
+        "granite-moe-3b-a800m": dict(num_layers=32, d_model=1536,
+                                     num_heads=24, num_kv_heads=8,
+                                     vocab_size=49155, num_experts=40,
+                                     experts_per_tok=8, arch_type="moe"),
+        "qwen2-0.5b": dict(num_layers=24, d_model=896, num_heads=14,
+                           num_kv_heads=2, d_ff=4864, vocab_size=151936,
+                           qkv_bias=True, arch_type="dense"),
+        "qwen3-moe-235b-a22b": dict(num_layers=94, d_model=4096,
+                                    num_heads=64, num_kv_heads=4,
+                                    vocab_size=151936, num_experts=128,
+                                    experts_per_tok=8, qk_norm=True,
+                                    arch_type="moe"),
+        "pixtral-12b": dict(num_layers=40, d_model=5120, num_heads=32,
+                            num_kv_heads=8, d_ff=14336, vocab_size=131072,
+                            arch_type="vlm"),
+        "qwen3-8b": dict(num_layers=36, d_model=4096, num_heads=32,
+                         num_kv_heads=8, d_ff=12288, vocab_size=151936,
+                         qk_norm=True, arch_type="dense"),
+    }
+    for aid, fields in expect.items():
+        cfg = get_config(aid)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (aid, k, getattr(cfg, k), v)
+        assert cfg.citation

@@ -1,0 +1,134 @@
+"""Unit/property tests for the LM building blocks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.lm.layers import (attention, cache_update, decode_attention,
+                                    rmsnorm, rope)
+from repro.models.lm.ssm import ssd_chunked, ssd_decode_step
+
+RNG = np.random.default_rng(0)
+
+
+def test_rmsnorm_unit_scale():
+    x = jnp.asarray(RNG.standard_normal((4, 8, 16)), jnp.float32)
+    y = rmsnorm(x, jnp.ones((16,)))
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_rope_preserves_norm_and_relative_position():
+    d = 32
+    q = jnp.asarray(RNG.standard_normal((1, 6, 2, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 6, 2, d)), jnp.float32)
+    pos = jnp.arange(6)
+    qr, kr = rope(q, pos, 1e4), rope(k, pos, 1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(qr), axis=-1),
+                               np.linalg.norm(np.asarray(q), axis=-1),
+                               rtol=1e-5)
+    # relative-position property: shifting both by c leaves q·k unchanged
+    qr2, kr2 = rope(q, pos + 17, 1e4), rope(k, pos + 17, 1e4)
+    dot1 = np.einsum("bqhd,bkhd->bhqk", np.asarray(qr), np.asarray(kr))
+    dot2 = np.einsum("bqhd,bkhd->bhqk", np.asarray(qr2), np.asarray(kr2))
+    np.testing.assert_allclose(dot1, dot2, atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [3, 8, 64])
+def test_attention_chunk_invariance(chunk):
+    q = jnp.asarray(RNG.standard_normal((2, 17, 4, 8)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 17, 2, 8)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 17, 2, 8)), jnp.float32)
+    base = attention(q, k, v, causal=True, chunk=64)
+    out = attention(q, k, v, causal=True, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(out), atol=1e-5)
+
+
+def test_attention_causal_mask():
+    """Changing future tokens must not change past outputs."""
+    q = jnp.asarray(RNG.standard_normal((1, 8, 2, 4)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 8, 2, 4)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 8, 2, 4)), jnp.float32)
+    out1 = attention(q, k, v, causal=True, chunk=4)
+    k2 = k.at[:, 5:].set(99.0)
+    v2 = v.at[:, 5:].set(-7.0)
+    out2 = attention(q, k2, v2, causal=True, chunk=4)
+    np.testing.assert_allclose(np.asarray(out1)[:, :5],
+                               np.asarray(out2)[:, :5], atol=1e-5)
+
+
+def test_attention_sliding_window():
+    s, w = 12, 4
+    q = jnp.asarray(RNG.standard_normal((1, s, 1, 4)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, s, 1, 4)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, s, 1, 4)), jnp.float32)
+    out = attention(q, k, v, causal=True, window=w, chunk=4)
+    # position i must ignore keys < i-w+1: perturb an old key
+    k2 = k.at[:, 0].set(50.0)
+    v2 = v.at[:, 0].set(50.0)
+    out2 = attention(q, k2, v2, causal=True, window=w, chunk=4)
+    np.testing.assert_allclose(np.asarray(out)[:, w:],
+                               np.asarray(out2)[:, w:], atol=1e-5)
+    # but position 0 must see it
+    assert not np.allclose(np.asarray(out)[:, 0], np.asarray(out2)[:, 0])
+
+
+@settings(max_examples=15, deadline=None)
+@given(w=st.integers(4, 10), steps=st.integers(1, 14))
+def test_ring_cache_decode_matches_window_attention(w, steps):
+    """Decode through a ring cache of size w == windowed full attention."""
+    d, h = 4, 2
+    rng = np.random.default_rng(steps * 31 + w)
+    ks = jnp.asarray(rng.standard_normal((1, steps, h, d)), jnp.float32)
+    vs = jnp.asarray(rng.standard_normal((1, steps, h, d)), jnp.float32)
+    qs = jnp.asarray(rng.standard_normal((1, steps, h, d)), jnp.float32)
+    full = attention(qs, ks, vs, causal=True, window=w, chunk=4)
+    kc = jnp.zeros((1, w, h, d))
+    vc = jnp.zeros((1, w, h, d))
+    for t in range(steps):
+        kc, vc = cache_update(kc, vc, ks[:, t:t + 1], vs[:, t:t + 1],
+                              jnp.asarray(t))
+        out = decode_attention(qs[:, t:t + 1], kc, vc, jnp.asarray(t),
+                               window=w)
+        np.testing.assert_allclose(np.asarray(out)[0, 0],
+                                   np.asarray(full)[0, t], atol=2e-5)
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    b, l, h, p, n = 1, 12, 2, 4, 3
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, l, h)) * 0.5 + 0.1, jnp.float32)
+    a_log = jnp.asarray(rng.standard_normal((h,)) * 0.2, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+    D = jnp.asarray(rng.standard_normal((h,)), jnp.float32)
+    y_chunk, S_chunk = ssd_chunked(x, dt, a_log, B, C, D, chunk=5)
+    # naive recurrence via the decode step
+    S = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(l):
+        y, S = ssd_decode_step(S, x[:, t], dt[:, t], a_log, B[:, t], C[:, t], D)
+        ys.append(y)
+    y_naive = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S_chunk), np.asarray(S), atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(chunk=st.integers(2, 9), l=st.integers(3, 20))
+def test_ssd_chunk_size_invariance(chunk, l):
+    b, h, p, n = 1, 2, 3, 2
+    rng = np.random.default_rng(chunk * 100 + l)
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, l, h)) * 0.4 + 0.1, jnp.float32)
+    a_log = jnp.zeros((h,))
+    B = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+    D = jnp.zeros((h,))
+    y1, s1 = ssd_chunked(x, dt, a_log, B, C, D, chunk=chunk)
+    y2, s2 = ssd_chunked(x, dt, a_log, B, C, D, chunk=l)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)

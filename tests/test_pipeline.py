@@ -1,0 +1,122 @@
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import AsyncPipeline, Stage
+from repro.core.pipeline.minibatch import MinibatchPipeline
+from repro.core.kvstore import (DistKVStore, NetworkModel, PartitionPolicy,
+                                Transport)
+from repro.core.partition import hierarchical_partition, split_training_set
+from repro.core.sampler import DistributedSampler
+from repro.graph import get_dataset
+
+
+def test_async_pipeline_preserves_order_and_results():
+    stages = [Stage("double", lambda x: x * 2, depth=3),
+              Stage("inc", lambda x: x + 1, depth=2)]
+    out = list(AsyncPipeline(range(50), stages))
+    assert out == [x * 2 + 1 for x in range(50)]
+
+
+def test_async_pipeline_sync_mode_identical():
+    stages = [Stage("sq", lambda x: x * x, depth=2)]
+    a = list(AsyncPipeline(range(20), stages, sync=True))
+    b = list(AsyncPipeline(range(20), stages, sync=False))
+    assert a == b
+
+
+def test_async_pipeline_overlaps_stage_latency():
+    def slow(x):
+        time.sleep(0.01)
+        return x
+    stages = [Stage("s1", slow, depth=4), Stage("s2", slow, depth=4)]
+    t0 = time.perf_counter()
+    consumed = 0
+    for _ in AsyncPipeline(range(20), stages):
+        time.sleep(0.01)   # consumer work
+        consumed += 1
+    dt = time.perf_counter() - t0
+    assert consumed == 20
+    # 3 overlapped 10ms stages for 20 items: ~0.2s+ramp, not 0.6s serial
+    assert dt < 0.45, dt
+
+
+def test_async_pipeline_error_propagates():
+    def boom(x):
+        if x == 3:
+            raise ValueError("boom")
+        return x
+    with pytest.raises(ValueError):
+        list(AsyncPipeline(range(10), [Stage("b", boom, depth=2)]))
+
+
+def test_stage_stats_recorded():
+    p = AsyncPipeline(range(10), [Stage("w", lambda x: x, depth=2)])
+    list(p)
+    assert p.stats_report()["w"]["items"] == 10
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = get_dataset("product-sim", scale=11)
+    hp = hierarchical_partition(ds.graph, 2, 1, split_mask=ds.split_mask,
+                                seed=0)
+    book = hp.book
+    feats_new = ds.feats[book.new2old_node]
+    labels_new = ds.labels[book.new2old_node]
+    tp = Transport(NetworkModel(sleep=True, latency_s=2e-3,
+                                bandwidth_Bps=1e9))
+    store = DistKVStore({"node": PartitionPolicy("node", book.node_offsets)},
+                        transport=tp)
+    store.init_data("feat", feats_new.shape[1:], np.float32, "node",
+                    full_array=feats_new)
+    train_new = book.old2new_node[ds.train_nids]
+    seeds = split_training_set(hp, train_new)[0]
+    return ds, hp, store, tp, seeds, labels_new
+
+
+def _run(world, sync, non_stop, epochs=3):
+    ds, hp, store, tp, seeds, labels_new = world
+    sampler = DistributedSampler(hp.book, hp.partitions, [10, 5], 32,
+                                 machine=0, transport=tp, seed=0)
+    pipe = MinibatchPipeline(sampler, store.client(0), "feat", seeds,
+                             labels=labels_new[seeds], sync=sync,
+                             non_stop=non_stop, to_device=False, seed=1)
+    t0 = time.perf_counter()
+    got = []
+    for e in range(epochs):
+        for mb in pipe.epoch(e):
+            time.sleep(0.004)
+            got.append(mb)
+    dt = time.perf_counter() - t0
+    pipe.stop()
+    return dt, got
+
+
+def test_minibatch_pipeline_same_count_all_modes(world):
+    _, a = _run(world, True, False)
+    _, b = _run(world, False, False)
+    _, c = _run(world, False, True)
+    assert len(a) == len(b) == len(c) > 0
+    # every minibatch has features attached by the CPU prefetch stage
+    assert all(m.input_feats is not None for m in a + b + c)
+
+
+def test_minibatch_pipeline_async_faster_than_sync(world):
+    t_sync, _ = _run(world, True, False)
+    t_async, _ = _run(world, False, True)
+    assert t_async < t_sync
+
+
+def test_pipeline_feature_correctness(world):
+    ds, hp, store, tp, seeds, labels_new = world
+    feats_new = ds.feats[hp.book.new2old_node]
+    sampler = DistributedSampler(hp.book, hp.partitions, [5], 16,
+                                 machine=0, seed=0)
+    pipe = MinibatchPipeline(sampler, store.client(0), "feat", seeds,
+                             labels=labels_new[seeds], sync=True,
+                             non_stop=False, to_device=False)
+    for mb in pipe.epoch(0):
+        assert np.allclose(mb.input_feats, feats_new[mb.input_gids])
+        break

@@ -1,0 +1,75 @@
+"""Unit tests for the dry-run analysis tooling (HLO collective parser,
+roofline model) — these guard the §Roofline methodology."""
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import (_split_computations,
+                                 collective_bytes_from_hlo)
+from repro.launch.roofline import (cache_bytes, memory_bytes, model_flops,
+                                   tokens_per_step)
+
+HLO = """\
+HloModule test
+
+%region_body (p: (s32[], f32[8,4])) -> (s32[], f32[8,4]) {
+  %ag = f32[8,4]{1,0} all-gather(%x), replica_groups={}
+  ROOT %t = (s32[], f32[8,4]) tuple(%i, %ag)
+}
+
+%region_cond (p: (s32[], f32[8,4])) -> pred[] {
+  %c = s32[] constant(5)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8,4]) -> f32[8,4] {
+  %ar = f32[8,4]{1,0} all-reduce(%a), to_apply=%add
+  %w = (s32[], f32[8,4]) while(%init), condition=%region_cond, body=%region_body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %r = f32[8,4]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_split_computations():
+    comps = _split_computations(HLO)
+    assert set(comps) == {"region_body", "region_cond", "main"}
+
+
+def test_collective_loop_multiplication():
+    out = collective_bytes_from_hlo(HLO)
+    # all-reduce once: 8*4*4 = 128 B; all-gather in a 5-trip loop: 5*128
+    assert out["all-reduce"] == 128
+    assert out["all-gather"] == 5 * 128
+    assert out["total"] == 6 * 128
+    assert out["count"] == 6
+
+
+def test_collective_tuple_result():
+    hlo = """\
+ENTRY %m (a: f32[2,2]) -> f32[2,2] {
+  %a2a = (f32[2,2]{1,0}, f32[2,2]{1,0}, /*index=2*/f32[2,2]{1,0}) all-to-all(%a, %b, %c)
+  ROOT %r = f32[2,2]{1,0} get-tuple-element(%a2a), index=0
+}
+"""
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-to-all"] == 3 * 16
+
+
+def test_tokens_per_step():
+    assert tokens_per_step("train_4k") == 256 * 4096
+    assert tokens_per_step("decode_32k") == 128
+    assert tokens_per_step("long_500k") == 1
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mamba2-2.7b",
+                                  "qwen3-moe-235b-a22b"])
+def test_roofline_model_terms_positive(arch):
+    for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        assert model_flops(arch, shape) > 0
+        assert memory_bytes(arch, shape, 256) > 0
+        assert cache_bytes(arch, shape) >= 0
+
+
+def test_moe_active_flops_less_than_total():
+    from repro.configs import get_config
+    cfg = get_config("qwen3-moe-235b-a22b")
+    assert cfg.active_param_count() < 0.15 * cfg.param_count()
