@@ -34,6 +34,15 @@ def small_cfg(arch="graphsage", in_dim=100, classes=16, batch=32,
                      batch_size=batch, num_rels=rels)
 
 
+def hetero_cfg(ds, batch=16, fanouts=(5, 3), hidden=64):
+    """Typed-relation RGCN config for a schema'd dataset: each layer gets
+    per-relation fanouts (the layer fanout for every relation)."""
+    rel_fanouts = [{rel: f for rel in ds.schema.etypes} for f in fanouts]
+    return GNNConfig(arch="rgcn", in_dim=ds.feats.shape[1], hidden_dim=hidden,
+                     num_classes=ds.num_classes, fanouts=rel_fanouts,
+                     batch_size=batch, num_rels=ds.schema.num_etypes)
+
+
 def make_trainer(ds, cfg, *, machines=2, tpm=2, method="metis",
                  use_level2=True, sync=False, non_stop=True, seed=0,
                  network=True):

@@ -15,7 +15,7 @@ relative ordering Euler < DistDGL < DistDGLv2 per model.
 """
 from __future__ import annotations
 
-from .common import csv_line, make_trainer, small_cfg, time_epochs
+from .common import csv_line, hetero_cfg, make_trainer, small_cfg, time_epochs
 from repro.graph import get_dataset
 
 MODES = [
@@ -30,15 +30,21 @@ MODES = [
 
 def run(scale=13, epochs=3):
     rows = []
+    # rgcn-hetero: the typed-relation path end-to-end (per-relation
+    # fanouts, per-ntype KVStore policies) on the mag-hetero heterograph
     for arch, ds_name, rels in [("graphsage", "product-sim", 1),
                                 ("gat", "product-sim", 1),
-                                ("rgcn", "mag-sim", 4)]:
+                                ("rgcn", "mag-sim", 4),
+                                ("rgcn-hetero", "mag-hetero", None)]:
         ds = get_dataset(ds_name, scale=scale)
         # mag-sim has the paper's papers100M-like 1% train split: use a
         # batch the per-trainer split can sustain
-        bs = 16 if ds_name == "mag-sim" else 32
-        cfg = small_cfg(arch=arch, in_dim=ds.feats.shape[1],
-                        rels=rels, hidden=64, batch=bs)
+        bs = 16 if ds_name.startswith("mag") else 32
+        if arch == "rgcn-hetero":
+            cfg = hetero_cfg(ds, batch=bs)
+        else:
+            cfg = small_cfg(arch=arch, in_dim=ds.feats.shape[1],
+                            rels=rels, hidden=64, batch=bs)
         base = None
         for name, kw in MODES:
             tr = make_trainer(ds, cfg, **kw)

@@ -15,6 +15,8 @@ import time
 import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# allow `python benchmarks/run.py` as well as `python -m benchmarks.run`
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 BENCHES = ["fig1", "fig2", "fig10", "fig12", "fig13", "fig14", "table2",
            "kernels", "roofline"]

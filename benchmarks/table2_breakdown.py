@@ -1,26 +1,25 @@
 """Table 2 analogue: end-to-end pipeline time breakdown — partitioning,
 partition load/save, training-data load, and train time, plus the
 per-stage busy/starved/backpressured breakdown of the async mini-batch
-pipeline (what the paper's Fig. 7 stages actually cost)."""
+pipeline (what the paper's Fig. 7 stages actually cost).
+
+Two workloads:
+  * ``table2/...``        — homogeneous GraphSAGE on product-sim;
+  * ``table2/hetero/...`` — typed-relation RGCN on the mag-hetero
+    heterograph (per-relation fanouts, per-ntype KVStore policies), the
+    paper's OGBN-MAG-class configuration.
+"""
 from __future__ import annotations
 
-import os
 import tempfile
 import time
 
-import numpy as np
-
-from .common import csv_line, make_trainer, small_cfg
+from .common import csv_line, hetero_cfg, make_trainer, small_cfg
 from repro.checkpoint import save_kvstore, load_kvstore
 from repro.graph import get_dataset
 
 
-def run(scale=12, epochs=2):
-    t0 = time.perf_counter()
-    ds = get_dataset("product-sim", scale=scale)
-    t_load = time.perf_counter() - t0
-
-    cfg = small_cfg(in_dim=ds.feats.shape[1])
+def _breakdown(tag: str, ds, cfg, t_load: float, epochs: int) -> dict:
     tr = make_trainer(ds, cfg)           # partitions inside
     t_part = tr.partition_time_s
 
@@ -35,19 +34,39 @@ def run(scale=12, epochs=2):
         tr.train_epoch(e)
     t_train = time.perf_counter() - t0
     stage_stats = tr.pipelines[0].stats_report()
+    sampling = tr.sampling_stats()
     tr.stop()
 
-    csv_line("table2/load_data", t_load * 1e6)
-    csv_line("table2/partition", t_part * 1e6)
-    csv_line("table2/save_load_partition", t_ckpt * 1e6)
-    csv_line("table2/train", t_train * 1e6, f"epochs={epochs}")
+    csv_line(f"{tag}/load_data", t_load * 1e6)
+    csv_line(f"{tag}/partition", t_part * 1e6)
+    csv_line(f"{tag}/save_load_partition", t_ckpt * 1e6)
+    csv_line(f"{tag}/train", t_train * 1e6, f"epochs={epochs}")
     for name, st in stage_stats.items():
-        csv_line(f"table2/stage/{name}",
+        csv_line(f"{tag}/stage/{name}",
                  st["busy_s"] * 1e6 / max(st["items"], 1),
                  f"items={st['items']};starved_s={st['wait_in_s']:.3f};"
                  f"backpressure_s={st['wait_out_s']:.3f}")
+    if "edges_per_etype" in sampling:
+        per = sampling["edges_per_etype"]
+        csv_line(f"{tag}/edges_per_etype", float(sum(per.values())),
+                 ";".join(f"{k}={v}" for k, v in per.items()))
     return dict(load=t_load, partition=t_part, ckpt=t_ckpt, train=t_train,
                 stages=stage_stats)
+
+
+def run(scale=12, epochs=2):
+    t0 = time.perf_counter()
+    ds = get_dataset("product-sim", scale=scale)
+    t_load = time.perf_counter() - t0
+    cfg = small_cfg(in_dim=ds.feats.shape[1])
+    out = {"homogeneous": _breakdown("table2", ds, cfg, t_load, epochs)}
+
+    t0 = time.perf_counter()
+    ds_h = get_dataset("mag-hetero", scale=scale)
+    t_load_h = time.perf_counter() - t0
+    cfg_h = hetero_cfg(ds_h)
+    out["hetero"] = _breakdown("table2/hetero", ds_h, cfg_h, t_load_h, epochs)
+    return out
 
 
 if __name__ == "__main__":

@@ -51,12 +51,17 @@ def load_pytree(template: Any, directory: str) -> Any:
     return jax.tree_util.tree_unflatten(flat_template, new_leaves)
 
 
+def _kv_fname(part: int, name: str) -> str:
+    # typed tensors are named "feat:<ntype>"; ':' is not portable in paths
+    return f"part{part}_{name.replace(':', '__')}.npy"
+
+
 def save_kvstore(store, directory: str) -> None:
     os.makedirs(directory, exist_ok=True)
     meta = {"num_parts": store.num_parts, "names": sorted(store._meta)}
     for p, server in enumerate(store.servers):
         for name in store._meta:
-            np.save(os.path.join(directory, f"part{p}_{name}.npy"),
+            np.save(os.path.join(directory, _kv_fname(p, name)),
                     server.local_view(name))
     with open(os.path.join(directory, "kv_manifest.json"), "w") as f:
         json.dump(meta, f)
@@ -68,7 +73,7 @@ def load_kvstore(store, directory: str) -> None:
     assert meta["num_parts"] == store.num_parts
     for p, server in enumerate(store.servers):
         for name in meta["names"]:
-            arr = np.load(os.path.join(directory, f"part{p}_{name}.npy"))
+            arr = np.load(os.path.join(directory, _kv_fname(p, name)))
             dst = server.local_view(name)
             assert dst.shape == arr.shape, (name, dst.shape, arr.shape)
             dst[...] = arr

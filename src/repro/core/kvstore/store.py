@@ -184,3 +184,40 @@ class KVClient:
         pol = self.store.policy_for(name)
         parts = pol.part_of(np.asarray(ids, dtype=np.int64))
         return float((parts == self.machine).mean()) if len(ids) else 1.0
+
+    # -- heterograph path ----------------------------------------------
+    def pull_typed(self, name_prefix: str, fused_ids: np.ndarray,
+                   typed, ntypes: Optional[np.ndarray] = None) -> np.ndarray:
+        """Gather rows for a mixed-type fused-ID set, routing every node
+        type through its own policy (§5.4's per-type registration).
+
+        ``typed`` is a ``core.partition.book.TypedPartitionData``; node type
+        t's rows live in tensor ``f"{name_prefix}:{ntype_name}"`` indexed by
+        *type-local* IDs under policy ``node:<ntype>``. Rows come back in
+        ``fused_ids`` order in one contiguous buffer (the paper's CPU
+        prefetch contract) — all per-type tensors must share dtype and
+        feature shape. ``ntypes`` (if given) is the caller's precomputed
+        node type per id — the sampler's typed frontier bookkeeping — which
+        skips the type lookup here.
+        """
+        fused_ids = np.asarray(fused_ids, dtype=np.int64)
+        if ntypes is None:
+            types, tids = typed.nid2typed(fused_ids)
+        else:
+            types = ntypes
+            tids = typed.node_type_local[fused_ids]
+        out: Optional[np.ndarray] = None
+        for t, ntname in enumerate(typed.schema.ntypes):
+            m = types == t
+            if not m.any():
+                continue
+            rows = self.pull(f"{name_prefix}:{ntname}", tids[m])
+            if out is None:
+                out = np.empty((len(fused_ids),) + rows.shape[1:],
+                               dtype=rows.dtype)
+            out[m] = rows
+        if out is None:   # empty id set: use any registered type for shape
+            sample = self.store.servers[self.machine].local_view(
+                f"{name_prefix}:{typed.schema.ntypes[0]}")
+            out = np.empty((0,) + sample.shape[1:], dtype=sample.dtype)
+        return out

@@ -19,11 +19,12 @@ rows are never expanded locally).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from ...graph.csr import CSRGraph, to_coo
+from ...graph.hetero import HeteroSchema
 
 
 @dataclasses.dataclass
@@ -36,6 +37,8 @@ class GraphPartition:
     etypes: Optional[np.ndarray]
     local2global: np.ndarray  # (n_local,) NEW global node ids; [:n_core] core
     n_core: int
+    _rel_views: Dict[int, "GraphPartition"] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def n_local(self) -> int:
@@ -48,6 +51,34 @@ class GraphPartition:
     @property
     def num_local_edges(self) -> int:
         return len(self.indices)
+
+    def relation_view(self, etype: int) -> "GraphPartition":
+        """This partition restricted to one relation's edges.
+
+        Same core rows and local node space (``local2global`` is shared,
+        not copied); only the adjacency is filtered, so per-relation
+        sampling reuses ``sample_local`` unchanged. The view is built
+        lazily once and cached. An untyped partition *is* its own
+        relation-0 view — that identity is what keeps the degenerate
+        homogeneous schema byte-identical to the legacy path.
+        """
+        if self.etypes is None:
+            if etype != 0:
+                raise KeyError(f"untyped partition has no relation {etype}")
+            return self
+        if etype not in self._rel_views:
+            keep = np.nonzero(self.etypes == etype)[0]
+            rows = np.repeat(np.arange(self.n_core, dtype=np.int64),
+                             np.diff(self.indptr))[keep]
+            indptr = np.zeros(self.n_core + 1, dtype=np.int64)
+            np.add.at(indptr, rows + 1, 1)
+            np.cumsum(indptr, out=indptr)
+            self._rel_views[etype] = GraphPartition(
+                part_id=self.part_id, indptr=indptr,
+                indices=self.indices[keep], edge_ids=self.edge_ids[keep],
+                etypes=None, local2global=self.local2global,
+                n_core=self.n_core)
+        return self._rel_views[etype]
 
 
 @dataclasses.dataclass
@@ -147,6 +178,112 @@ def build_partitions(g: CSRGraph, parts: np.ndarray
             etypes=None if et_sorted is None else et_sorted[elo:ehi],
             local2global=local2global, n_core=n_core))
     return book, partitions
+
+
+# ---------------------------------------------------------------------------
+# typed (heterograph) partition data: per-ntype node policies and per-etype
+# edge policies over TYPE-LOCAL id spaces (§5.4's "separate policies per
+# node/edge type", delivered — see DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TypedPartitionData:
+    """Typed ID spaces layered on a relabeled partition book.
+
+    After ``build_partitions`` the fused node IDs are partition-contiguous.
+    For each node type t we define a *type-local* ID space by ranking type-t
+    nodes in fused-ID order — which makes every partition's type-t nodes a
+    contiguous type-local range, i.e. each per-ntype KVStore policy is again
+    binary-search + subtraction (same scheme as the fused policies, one
+    offsets array per type). Edge types get the same treatment over the
+    fused edge-ID order.
+
+    Maps (all in the NEW/fused id spaces):
+      ntype_of_node (n,)  — node type per fused node id
+      node_type_local (n,) — type-local id of each fused node
+      type2node[t]        — fused ids of type t, in type-local order
+      (and the edge-side equivalents)
+    """
+    schema: HeteroSchema
+    ntype_of_node: np.ndarray
+    node_type_local: np.ndarray
+    type2node: List[np.ndarray]
+    etype_of_edge: np.ndarray
+    edge_type_local: np.ndarray
+    type2edge: List[np.ndarray]
+    node_policies: "Dict[str, object]"   # "node:<ntype>" -> PartitionPolicy
+    edge_policies: "Dict[str, object]"   # "edge:<rel>"   -> PartitionPolicy
+
+    def node_policy_name(self, ntype: str) -> str:
+        return f"node:{ntype}"
+
+    def edge_policy_name(self, rel: str) -> str:
+        return f"edge:{rel}"
+
+    def policies(self) -> "Dict[str, object]":
+        return {**self.node_policies, **self.edge_policies}
+
+    def nid2typed(self, nids: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """fused node ids -> (ntype ids, type-local ids)."""
+        nids = np.asarray(nids, dtype=np.int64)
+        return self.ntype_of_node[nids], self.node_type_local[nids]
+
+    def typed2nid(self, ntype: int, tids: np.ndarray) -> np.ndarray:
+        return self.type2node[ntype][np.asarray(tids, dtype=np.int64)]
+
+
+def _typed_axis(type_of: np.ndarray, num_types: int, part_of: np.ndarray,
+                num_parts: int, names: List[str], prefix: str):
+    """Shared node/edge construction for ``build_typed_partition``."""
+    from ..kvstore.store import PartitionPolicy
+    n = len(type_of)
+    type_local = np.zeros(n, dtype=np.int64)
+    type2id: List[np.ndarray] = []
+    policies = {}
+    for t in range(num_types):
+        sel = np.nonzero(type_of == t)[0].astype(np.int64)   # fused-id order
+        type_local[sel] = np.arange(len(sel), dtype=np.int64)
+        type2id.append(sel)
+        counts = np.bincount(part_of[sel], minlength=num_parts)
+        offs = np.zeros(num_parts + 1, dtype=np.int64)
+        np.cumsum(counts, out=offs[1:])
+        policies[f"{prefix}:{names[t]}"] = PartitionPolicy(
+            f"{prefix}:{names[t]}", offs)
+    return type_local, type2id, policies
+
+
+def build_typed_partition(book: PartitionBook, schema: HeteroSchema,
+                          ntypes_new: Optional[np.ndarray],
+                          etypes_new: Optional[np.ndarray]
+                          ) -> TypedPartitionData:
+    """Construct per-type policies + id maps for a partitioned heterograph.
+
+    ``ntypes_new``/``etypes_new`` are the type arrays in the NEW (relabeled)
+    id orders, e.g. ``g.ntypes[book.new2old_node]`` — None means untyped
+    (all type 0), which yields policies identical to the fused ones: the
+    degenerate schema costs nothing.
+    """
+    n = book.num_nodes
+    m = int(book.edge_offsets[-1])
+    nt = (np.zeros(n, dtype=np.int32) if ntypes_new is None
+          else np.asarray(ntypes_new, dtype=np.int32))
+    et = (np.zeros(m, dtype=np.int32) if etypes_new is None
+          else np.asarray(etypes_new, dtype=np.int32))
+    assert len(nt) == n and len(et) == m, (len(nt), n, len(et), m)
+
+    node_part = book.nid2part(np.arange(n, dtype=np.int64))
+    edge_part = book.eid2part(np.arange(m, dtype=np.int64))
+    node_type_local, type2node, node_policies = _typed_axis(
+        nt, schema.num_ntypes, node_part, book.num_parts,
+        list(schema.ntypes), "node")
+    edge_type_local, type2edge, edge_policies = _typed_axis(
+        et, schema.num_etypes, edge_part, book.num_parts,
+        list(schema.etypes), "edge")
+    return TypedPartitionData(
+        schema=schema, ntype_of_node=nt, node_type_local=node_type_local,
+        type2node=type2node, etype_of_edge=et,
+        edge_type_local=edge_type_local, type2edge=type2edge,
+        node_policies=node_policies, edge_policies=edge_policies)
 
 
 def halo_stats(partitions: List[GraphPartition]) -> dict:

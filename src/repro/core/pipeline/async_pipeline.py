@@ -106,11 +106,12 @@ class AsyncPipeline:
                 for item in self.source:
                     if self._stop.is_set():
                         break
-                    self._queues[0].put(item)
+                    if not self._put(self._queues[0], item):
+                        return   # stopped while backpressured
             except BaseException as e:   # propagate into the consumer
                 self._error = e
             finally:
-                self._queues[0].put(_SENTINEL)
+                self._put(self._queues[0], _SENTINEL)
 
         t = threading.Thread(target=feeder, name=f"{self.name}-feed", daemon=True)
         t.start()
@@ -122,38 +123,89 @@ class AsyncPipeline:
             t.start()
             self._threads.append(t)
 
+    def _put(self, q: queue.Queue, item: Any) -> bool:
+        """put() that cannot deadlock a shutdown: while running it blocks
+        (bounded-queue backpressure), but it re-checks the stop flag so a
+        producer stuck on a full queue wakes up once ``stop()`` is called.
+        Returns False if the item was dropped because the pipeline stopped."""
+        while not self._stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        try:                       # stopping: best-effort, never block
+            q.put_nowait(item)
+            return True
+        except queue.Full:
+            return False
+
+    def _get(self, q: queue.Queue) -> Any:
+        """get() that re-checks the stop flag: a worker that was mid-``fn``
+        when ``stop()``'s pill/join window expired must not block forever on
+        the abandoned (empty) input queue afterwards."""
+        while True:
+            try:
+                return q.get(timeout=0.1)
+            except queue.Empty:
+                if self._stop.is_set():
+                    return _SENTINEL
+
     def _stage_loop(self, i: int, s: Stage) -> None:
         in_q, out_q = self._queues[i], self._queues[i + 1]
         st = self.stats[s.name]
         while True:
             t0 = time.perf_counter()
-            item = in_q.get()
+            item = self._get(in_q)
             t1 = time.perf_counter()
             st.wait_in_s += t1 - t0
             if item is _SENTINEL or self._stop.is_set():
-                out_q.put(_SENTINEL)
+                self._put(out_q, _SENTINEL)
                 return
             try:
                 out = s.fn(item)
             except BaseException as e:
                 self._error = e
-                out_q.put(_SENTINEL)
+                self._put(out_q, _SENTINEL)
                 return
             t2 = time.perf_counter()
             st.busy_s += t2 - t1
-            out_q.put(out)
+            if not self._put(out_q, out):
+                return
             st.wait_out_s += time.perf_counter() - t2
             st.items += 1
 
-    def stop(self) -> None:
+    def stop(self, timeout: float = 5.0) -> None:
+        """Tear the pipeline down without leaking blocked threads.
+
+        A single drain races the workers: a stage blocked on ``put()`` into
+        a full queue can refill it right after the drain and then block
+        again forever. Instead we repeatedly (a) drain every queue so
+        blocked producers wake, (b) poison-pill every queue so blocked
+        consumers wake, and (c) join the workers with a bounded timeout,
+        until every thread has exited or ``timeout`` elapses."""
         self._stop.set()
-        # drain so producer threads blocked on put() can exit
-        for q in self._queues:
-            try:
-                while True:
-                    q.get_nowait()
-            except queue.Empty:
-                pass
+        deadline = time.perf_counter() + timeout
+        alive = [t for t in self._threads if t.is_alive()]
+        while alive:
+            for q in self._queues:
+                try:
+                    while True:
+                        q.get_nowait()
+                except queue.Empty:
+                    pass
+                try:
+                    q.put_nowait(_SENTINEL)
+                except queue.Full:
+                    pass
+            for t in alive:
+                t.join(timeout=0.05)
+            alive = [t for t in alive if t.is_alive()]
+            if time.perf_counter() >= deadline:
+                break   # daemon threads; don't hang the caller
+        # leave queues drained (sentinels only) so a consumer mid-iteration
+        # terminates instead of blocking on an abandoned queue
+        self._threads = [t for t in self._threads if t.is_alive()]
 
     def stats_report(self) -> dict:
         return {k: v.as_dict() for k, v in self.stats.items()}

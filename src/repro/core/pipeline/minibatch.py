@@ -49,10 +49,14 @@ class MinibatchPipeline:
                  batch_size: Optional[int] = None,
                  depths: dict | None = None,
                  sync: bool = False, non_stop: bool = True,
-                 to_device: bool = True, seed: int = 0):
+                 to_device: bool = True, seed: int = 0, typed=None):
         self.sampler = sampler
         self.kv_client = kv_client
         self.feat_name = feat_name
+        # heterograph runs: TypedPartitionData — features are registered
+        # per node type ("<feat_name>:<ntype>") and the prefetch stage
+        # routes each type through its own policy
+        self.typed = typed
         self.seeds = np.asarray(seeds, dtype=np.int64)
         self.labels = labels
         self.batch_size = batch_size or sampler.batch_size
@@ -77,7 +81,14 @@ class MinibatchPipeline:
     def _stage_cpu_prefetch(self, mb: MiniBatch) -> MiniBatch:
         # one contiguous buffer, exactly the paper's "collect data from both
         # local machines and remote machines ... store in contiguous memory"
-        mb.input_feats = self.kv_client.pull(self.feat_name, mb.input_gids)
+        if self.typed is not None:
+            # the sampler already typed the frontier (mb.input_ntypes)
+            mb.input_feats = self.kv_client.pull_typed(
+                self.feat_name, mb.input_gids, self.typed,
+                ntypes=mb.input_ntypes)
+        else:
+            mb.input_feats = self.kv_client.pull(self.feat_name,
+                                                 mb.input_gids)
         return mb
 
     def _stage_device_prefetch(self, mb: MiniBatch):

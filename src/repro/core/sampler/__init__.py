@@ -1,10 +1,11 @@
-from .mfg import MFGBlock, MiniBatch, capacities, pad_block
+from .mfg import (MFGBlock, MiniBatch, capacities, pad_block,
+                  pad_typed_block, relation_capacities)
 from .neighbor import sample_local
 from .dispatch import DistributedSampler, SamplerStats
 from .compaction import to_block_device, to_block_reference
 
 __all__ = [
-    "MFGBlock", "MiniBatch", "capacities", "pad_block", "sample_local",
-    "DistributedSampler", "SamplerStats", "to_block_device",
-    "to_block_reference",
+    "MFGBlock", "MiniBatch", "capacities", "pad_block", "pad_typed_block",
+    "relation_capacities", "sample_local", "DistributedSampler",
+    "SamplerStats", "to_block_device", "to_block_reference",
 ]

@@ -8,17 +8,28 @@ the per-partition results into one bipartite block. Seeds owned by the
 trainer's own machine are sampled through the shared-memory path; seeds
 owned elsewhere are counted as remote sampling requests (the transport is
 charged for the request + response bytes).
+
+Fanouts are per-layer and either an int (homogeneous) or a mapping
+``{etype: fanout}`` (DGL-style per-relation fanouts). Typed layers sample
+each relation independently on the owner's per-relation partition view and
+lay the block's edge axis out relation-major (``MFGBlock.rel_offsets``);
+the frontier stays one fused node set — exactly DistDGL's design, where
+heterogeneity lives in the relation schema while storage stays fused. An
+all-int fanout list takes the legacy code path untouched, which is what
+keeps homogeneous batches byte-identical.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Mapping, Optional, Sequence
 
 import numpy as np
 
+from ...graph.hetero import HeteroSchema
 from ..kvstore.transport import Transport
 from ..partition.book import GraphPartition, PartitionBook
-from .mfg import MFGBlock, MiniBatch, capacities, pad_block
+from .mfg import (Fanout, MFGBlock, MiniBatch, capacities, pad_block,
+                  pad_typed_block, relation_capacities)
 from .neighbor import sample_local
 
 
@@ -35,6 +46,7 @@ class SamplerStats:
     seeds_remote: int = 0
     edges_total: int = 0
     input_nodes_total: int = 0
+    edges_per_etype: Optional[np.ndarray] = None   # typed runs only
 
     @property
     def remote_seed_frac(self) -> float:
@@ -44,23 +56,44 @@ class SamplerStats:
 class DistributedSampler:
     """One trainer's sampler (runs in the sampling thread, §5.5).
 
-    fanouts are input-layer first (the paper's "15, 10, 5"). ``machine`` is
-    the trainer's home machine: its partition is accessed via shared memory,
-    all other partitions through (simulated) RPC.
+    fanouts are input-layer first (the paper's "15, 10, 5"); each entry is
+    an int or a per-relation mapping ``{etype: fanout}`` (keys: relation
+    ids, or names when ``schema`` is given). ``machine`` is the trainer's
+    home machine: its partition is accessed via shared memory, all other
+    partitions through (simulated) RPC. ``ntype_of_node`` (NEW-id space)
+    enables typed frontier bookkeeping: each minibatch reports its input
+    nodes' types so the CPU-prefetch stage can route per-ntype KVStore
+    pulls.
     """
 
     def __init__(self, book: PartitionBook, partitions: List[GraphPartition],
-                 fanouts: Sequence[int], batch_size: int, machine: int = 0,
-                 transport: Optional[Transport] = None, seed: int = 0):
+                 fanouts: Sequence[Fanout], batch_size: int, machine: int = 0,
+                 transport: Optional[Transport] = None, seed: int = 0,
+                 schema: Optional[HeteroSchema] = None,
+                 ntype_of_node: Optional[np.ndarray] = None):
         self.book = book
         self.partitions = partitions
         self.fanouts = list(fanouts)
         self.batch_size = batch_size
         self.machine = machine
         self.transport = transport
+        self.schema = schema
+        self.ntype_of_node = ntype_of_node
+        self.typed = any(isinstance(f, Mapping) for f in self.fanouts)
+        if self.typed and schema is None:
+            raise ValueError("per-relation fanouts require a HeteroSchema")
         self.caps = capacities(batch_size, self.fanouts)
+        if self.typed:
+            self.rel_caps = relation_capacities(
+                batch_size, self.fanouts, schema.num_etypes,
+                etype_id=schema.etype_id)
+        else:
+            self.rel_caps = [None] * len(self.fanouts)
         self.rng = np.random.default_rng(seed)
         self.stats = SamplerStats()
+        if self.typed:
+            self.stats.edges_per_etype = np.zeros(schema.num_etypes,
+                                                  dtype=np.int64)
 
     # ------------------------------------------------------------------
     def sample(self, seeds: np.ndarray, labels: Optional[np.ndarray] = None,
@@ -73,50 +106,19 @@ class DistributedSampler:
 
         cur = seeds
         blocks_rev: List[MFGBlock] = []
-        for hop, fanout in enumerate(reversed(self.fanouts)):
-            cap_src, cap_edge = self.caps[len(self.fanouts) - 1 - hop]
-            parts = book.nid2part(cur)
-            e_src_g: List[np.ndarray] = []
-            e_dst_i: List[np.ndarray] = []
-            e_type: List[np.ndarray] = []
-            typed = False
-            for p in np.unique(parts):
-                sel = np.nonzero(parts == p)[0]
-                local = book.nid2local(cur[sel], parts[sel])
-                src_g, seed_pos, eids, etyp = sample_local(
-                    self.partitions[int(p)], local, fanout, self.rng)
-                e_src_g.append(src_g)
-                e_dst_i.append(sel[seed_pos].astype(np.int32))
-                if etyp is not None:
-                    typed = True
-                    e_type.append(etyp)
-                # network accounting: remote sampling request/response
-                self.stats.seeds_total += len(sel)
-                if int(p) != self.machine:
-                    self.stats.seeds_remote += len(sel)
-                    if self.transport is not None:
-                        req = len(sel) * 8
-                        resp = len(src_g) * (8 + 8 + 4)
-                        self.transport.charge_remote(req + resp)
-            src_gids = (np.concatenate(e_src_g) if e_src_g
-                        else np.empty(0, dtype=np.int64))
-            dst_idx = (np.concatenate(e_dst_i) if e_dst_i
-                       else np.empty(0, dtype=np.int32))
-            etypes = np.concatenate(e_type) if typed else None
-
-            # next-layer inputs: current seeds first (to_block prefix rule)
-            uniq = _unique_first_occurrence(np.concatenate([cur, src_gids]))
-            # host-side compaction of src indices (device version:
-            # core.sampler.compaction, used by the GPU pipeline stage)
-            order = np.argsort(uniq, kind="stable")
-            pos_sorted = np.searchsorted(uniq[order], src_gids)
-            src_idx = order[pos_sorted].astype(np.int32)
-
-            blocks_rev.append(pad_block(
-                uniq, src_idx, dst_idx, etypes, num_dst=len(cur),
-                cap_src=cap_src, cap_edge=cap_edge))
-            self.stats.edges_total += len(src_gids)
-            cur = uniq
+        for hop in range(len(self.fanouts)):
+            layer = len(self.fanouts) - 1 - hop
+            fanout = self.fanouts[layer]
+            cap_src, cap_edge = self.caps[layer]
+            if isinstance(fanout, Mapping):
+                block = self._sample_typed_layer(cur, fanout, cap_src,
+                                                 self.rel_caps[layer])
+            else:
+                block = self._sample_untyped_layer(cur, fanout, cap_src,
+                                                   cap_edge)
+            blocks_rev.append(block)
+            self.stats.edges_total += block.num_edges
+            cur = block.src_gids[:block.num_src]
 
         self.stats.batches += 1
         self.stats.input_nodes_total += len(cur)
@@ -131,6 +133,121 @@ class DistributedSampler:
         if labels is not None:
             lab = np.zeros(self.batch_size, dtype=np.int64)
             lab[:n_seed] = labels
+        input_ntypes = None
+        if self.ntype_of_node is not None:
+            input_ntypes = self.ntype_of_node[blocks[0].src_gids].astype(
+                np.int32)
         return MiniBatch(blocks=blocks, seeds=seed_pad, seed_mask=seed_mask,
                          labels=lab, input_gids=blocks[0].src_gids,
+                         input_ntypes=input_ntypes,
                          batch_index=batch_index, epoch=epoch)
+
+    # ------------------------------------------------------------------
+    def _group_by_owner(self, cur: np.ndarray
+                        ) -> List[tuple[int, np.ndarray, np.ndarray]]:
+        """Partition-book lookup for one layer's frontier, computed once
+        per layer (every relation reuses it): [(part, sel, local_ids)]."""
+        parts = self.book.nid2part(cur)
+        self.stats.seeds_total += len(parts)
+        self.stats.seeds_remote += int((parts != self.machine).sum())
+        groups = []
+        for p in np.unique(parts):
+            sel = np.nonzero(parts == p)[0]
+            local = self.book.nid2local(cur[sel], parts[sel])
+            groups.append((int(p), sel, local))
+        return groups
+
+    def _dispatch(self, groups, fanout: int, view=None,
+                  collect_etypes: bool = False
+                  ) -> tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]:
+        """Owner-compute one (layer, relation): returns
+        (src_gids, dst_idx, etypes) concatenated over partitions in
+        partition order. ``view`` selects a per-relation partition view
+        (None = the full partition); ``etypes`` is None unless requested
+        and the partitions carry edge types."""
+        e_src_g: List[np.ndarray] = []
+        e_dst_i: List[np.ndarray] = []
+        e_type: List[np.ndarray] = []
+        typed = False
+        for p, sel, local in groups:
+            gp = self.partitions[p]
+            if view is not None:
+                gp = gp.relation_view(view)
+            src_g, seed_pos, _eids, etyp = sample_local(
+                gp, local, fanout, self.rng)
+            e_src_g.append(src_g)
+            e_dst_i.append(sel[seed_pos].astype(np.int32))
+            if collect_etypes and etyp is not None:
+                typed = True
+                e_type.append(etyp)
+            if self.transport is not None and p != self.machine:
+                req = len(sel) * 8
+                resp = len(src_g) * (8 + 8 + 4)
+                self.transport.charge_remote(req + resp)
+        src_gids = (np.concatenate(e_src_g) if e_src_g
+                    else np.empty(0, dtype=np.int64))
+        dst_idx = (np.concatenate(e_dst_i) if e_dst_i
+                   else np.empty(0, dtype=np.int32))
+        etypes = np.concatenate(e_type) if typed else None
+        return src_gids, dst_idx, etypes
+
+    @staticmethod
+    def _compact(cur: np.ndarray, src_gids: np.ndarray
+                 ) -> tuple[np.ndarray, np.ndarray]:
+        """Next-layer inputs: current seeds first (to_block prefix rule),
+        then newly discovered neighbors; returns (uniq, src_idx) with
+        ``src_idx`` the compacted per-edge src index. Host-side version of
+        core.sampler.compaction (the GPU pipeline stage)."""
+        uniq = _unique_first_occurrence(np.concatenate([cur, src_gids]))
+        order = np.argsort(uniq, kind="stable")
+        pos_sorted = np.searchsorted(uniq[order], src_gids)
+        src_idx = order[pos_sorted].astype(np.int32)
+        return uniq, src_idx
+
+    def _sample_untyped_layer(self, cur: np.ndarray, fanout: int,
+                              cap_src: int, cap_edge: int) -> MFGBlock:
+        """Legacy homogeneous layer (byte-identical to the pre-hetero path:
+        one sample_local call per owning partition, one flat edge list —
+        guarded by the golden-hash test)."""
+        groups = self._group_by_owner(cur)
+        src_gids, dst_idx, etypes = self._dispatch(groups, fanout,
+                                                   collect_etypes=True)
+        uniq, src_idx = self._compact(cur, src_gids)
+        return pad_block(uniq, src_idx, dst_idx, etypes, num_dst=len(cur),
+                         cap_src=cap_src, cap_edge=cap_edge)
+
+    def _sample_typed_layer(self, cur: np.ndarray, fanout: Mapping,
+                            cap_src: int,
+                            rel_offsets: np.ndarray) -> MFGBlock:
+        """Per-relation layer: each relation with a nonzero fanout samples
+        independently on the owners' relation views; edges land in the
+        relation-major layout. The frontier (and to_block compaction) stays
+        one fused node set, built relation-major so layout is deterministic."""
+        schema = self.schema
+        rel_fanout = schema.normalize_fanout(dict(fanout))
+        groups = self._group_by_owner(cur)
+        rel_src_g: List[np.ndarray] = []
+        rel_dst_i: List[np.ndarray] = []
+        for r in range(schema.num_etypes):
+            if rel_fanout[r] == 0:
+                rel_src_g.append(np.empty(0, dtype=np.int64))
+                rel_dst_i.append(np.empty(0, dtype=np.int32))
+                continue
+            src_g, dst_i, _ = self._dispatch(groups, int(rel_fanout[r]),
+                                             view=r)
+            rel_src_g.append(src_g)
+            rel_dst_i.append(dst_i)
+            self.stats.edges_per_etype[r] += len(src_g)
+        all_src = (np.concatenate(rel_src_g) if rel_src_g
+                   else np.empty(0, dtype=np.int64))
+        uniq, src_idx = self._compact(cur, all_src)
+        # split the compacted indices back per relation
+        rel_src_idx: List[np.ndarray] = []
+        off = 0
+        for r in range(schema.num_etypes):
+            n_r = len(rel_src_g[r])
+            rel_src_idx.append(src_idx[off:off + n_r])
+            off += n_r
+        return pad_typed_block(uniq, rel_src_idx, rel_dst_i,
+                               num_dst=len(cur), cap_src=cap_src,
+                               rel_offsets=rel_offsets)

@@ -5,9 +5,10 @@ memory as NumPy arrays (the paper keeps it in CPU memory), while mini-batch
 tensors are the only thing shipped to the accelerator.
 
 Supports optional edge types (for RGCN-style heterogeneous relations) and
-optional node types. For the paper's workloads a single node space with
-typed edges is sufficient; full heterographs with disjoint node-ID spaces
-are handled by the partition book's per-type policies.
+optional node types. The fused single-ID-space layout is deliberate:
+full heterographs are a *view* over it (``graph.hetero.HeteroCSRGraph``),
+and per-type node/edge ID spaces appear only at the KVStore boundary via
+the partition book's per-type policies (see DESIGN.md §3).
 """
 from __future__ import annotations
 

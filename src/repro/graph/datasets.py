@@ -15,8 +15,10 @@ from typing import Optional
 import numpy as np
 
 from .csr import CSRGraph
-from .generate import (community_labels_and_features, planted_partition_graph,
-                       random_features, rmat_graph, train_val_test_split)
+from .hetero import HeteroSchema
+from .generate import (community_labels_and_features, mag_graph,
+                       planted_partition_graph, random_features, rmat_graph,
+                       train_val_test_split)
 
 
 @dataclasses.dataclass
@@ -27,6 +29,7 @@ class GraphDataset:
     labels: np.ndarray             # (n,) int64
     split_mask: np.ndarray         # (n,) int8: 1 train / 2 val / 3 test
     num_classes: int
+    schema: Optional[HeteroSchema] = None   # set => first-class heterograph
 
     @property
     def train_nids(self) -> np.ndarray:
@@ -94,6 +97,20 @@ def mag_sim(scale: int = 14, seed: int = 3, num_etypes: int = 4) -> GraphDataset
                    num_ntypes=3)
     return _make("mag-sim", g, num_classes=16, feat_dim=128, seed=seed,
                  train_frac=0.01)
+
+
+@register("mag-hetero")
+def mag_hetero(scale: int = 12, seed: int = 5) -> GraphDataset:
+    """First-class heterograph (schema attached): 3 ntypes / 4 etypes,
+    labels + train/val/test split on papers only (the MAG-LSC task)."""
+    g, schema = mag_graph(scale, seed=seed)
+    labels, feats = community_labels_and_features(g, 16, 64, seed=seed)
+    mask = train_val_test_split(g.num_nodes, train_frac=0.1, seed=seed)
+    papers = g.ntypes == schema.ntype_id("paper")
+    mask[~papers] = 0              # only papers carry the prediction task
+    return GraphDataset(name="mag-hetero", graph=g, feats=feats,
+                        labels=labels, split_mask=mask, num_classes=16,
+                        schema=schema)
 
 
 @register("cluster-sim")

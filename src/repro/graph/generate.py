@@ -17,6 +17,7 @@ from __future__ import annotations
 import numpy as np
 
 from .csr import CSRGraph, from_edges, to_undirected
+from .hetero import HeteroSchema, fused_from_typed
 
 
 def rmat_graph(scale: int, edge_factor: int = 16, *,
@@ -91,6 +92,69 @@ def planted_partition_graph(num_nodes: int, num_blocks: int, *,
         etypes = rng.integers(0, num_etypes, size=len(src)).astype(np.int32)
     g = from_edges(src, dst, num_nodes, etypes=etypes, num_etypes=num_etypes)
     return to_undirected(g)
+
+
+def _powerlaw_targets(rng: np.random.Generator, num_edges: int,
+                      num_targets: int, alpha: float = 0.8) -> np.ndarray:
+    """Draw ``num_edges`` endpoints over [0, num_targets) with a Zipf-ish
+    skew (hub targets), the degree profile of citation/authorship graphs."""
+    u = rng.random(num_edges)
+    ranks = (num_targets * u ** (1.0 / (1.0 - alpha))).astype(np.int64)
+    ranks = np.minimum(ranks, num_targets - 1)
+    # permute so hub ids aren't correlated with id order
+    perm = rng.permutation(num_targets)
+    return perm[ranks]
+
+
+def mag_graph(scale: int = 12, *, authors_per_paper: float = 3.0,
+              cites_per_paper: float = 8.0, inst_frac: float = 0.02,
+              author_frac: float = 1.5, seed: int = 0
+              ) -> tuple[CSRGraph, HeteroSchema]:
+    """Synthetic OGBN-MAG-like heterograph: 3 node types, 4 relations.
+
+        paper       --cites-->      paper    (power-law in-degree)
+        author      --writes-->     paper
+        paper       --rev_writes--> author   (reverse of writes: lets the
+                                             sampler expand author frontiers)
+        institution --employs-->    author   (institution features reach
+                                             papers via author hops)
+
+    2**scale papers; authors ~ ``author_frac``×papers, institutions
+    ~ ``inst_frac``×papers. Edges point *toward* the prediction targets
+    (message-passing direction): the trainer samples in-neighbors of paper
+    seeds, so every relation's src type can enter a paper-rooted MFG,
+    mirroring the paper's MAG-LSC workload where labels live on papers only.
+    """
+    rng = np.random.default_rng(seed)
+    n_paper = 1 << scale
+    n_author = int(n_paper * author_frac)
+    n_inst = max(int(n_paper * inst_frac), 4)
+
+    # cites: paper -> paper, power-law cited-degree, no self-cites
+    m_cite = int(n_paper * cites_per_paper)
+    cite_src = rng.integers(0, n_paper, size=m_cite)
+    cite_dst = _powerlaw_targets(rng, m_cite, n_paper)
+    keep = cite_src != cite_dst
+    cite_src, cite_dst = cite_src[keep], cite_dst[keep]
+
+    # writes: author -> paper (each paper gets ~authors_per_paper authors,
+    # authors have power-law productivity)
+    m_wr = int(n_paper * authors_per_paper)
+    wr_author = _powerlaw_targets(rng, m_wr, n_author)
+    wr_paper = rng.integers(0, n_paper, size=m_wr)
+
+    # employs: institution -> author (hub institutions, one each per author)
+    emp_author = np.arange(n_author, dtype=np.int64)
+    emp_inst = _powerlaw_targets(rng, n_author, n_inst)
+
+    g, schema = fused_from_typed(
+        {"paper": n_paper, "author": n_author, "institution": n_inst},
+        [(("paper", "cites", "paper"), cite_src, cite_dst),
+         (("author", "writes", "paper"), wr_author, wr_paper),
+         (("paper", "rev_writes", "author"), wr_paper, wr_author),
+         (("institution", "employs", "author"), emp_inst, emp_author)],
+    )
+    return g, schema
 
 
 def random_features(num_nodes: int, dim: int, seed: int = 0,

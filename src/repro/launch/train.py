@@ -4,6 +4,9 @@ Two families:
   * GNN (the paper's workloads):
         python -m repro.launch.train --arch graphsage --dataset product-sim \
             --machines 2 --trainers-per-machine 2 --epochs 5
+    heterogeneous (typed relations end-to-end, RGCN on a schema'd dataset):
+        python -m repro.launch.train --arch rgcn --dataset mag-hetero \
+            --hetero --rel-fanout cites=10 --rel-fanout writes=5 --epochs 3
   * LM (assigned architectures, reduced or full):
         python -m repro.launch.train --arch qwen2-0.5b --smoke --steps 20
 
@@ -31,6 +34,32 @@ def run_gnn(args):
                               num_classes=ds.num_classes,
                               batch_size=min(cfg.batch_size, args.batch_size),
                               num_rels=ds.graph.num_etypes)
+    if args.hetero:
+        if ds.schema is None:
+            raise SystemExit(f"--hetero needs a schema'd dataset "
+                             f"(e.g. mag-hetero), got {args.dataset}")
+        # per-relation fanouts: every relation gets the layer fanout unless
+        # overridden with --rel-fanout <relation>=<k> (0 disables sampling
+        # that relation)
+        overrides = {}
+        for spec in args.rel_fanout or []:
+            rel, sep, k = spec.partition("=")
+            if not sep or not k.isdigit():
+                raise SystemExit(f"--rel-fanout expects <relation>=<int>, "
+                                 f"got {spec!r}")
+            if rel not in ds.schema.etypes:
+                raise SystemExit(f"unknown relation {rel!r}; dataset "
+                                 f"relations: {list(ds.schema.etypes)}")
+            overrides[rel] = int(k)
+        fanouts = [{rel: overrides.get(rel, f) for rel in ds.schema.etypes}
+                   for f in cfg.fanouts]
+        cfg = dataclasses.replace(cfg, fanouts=fanouts)
+        from ..graph import HeteroCSRGraph
+        counts = HeteroCSRGraph(ds.graph, ds.schema).type_counts()
+        print(f"[hetero] schema: {list(ds.schema.ntypes)} / "
+              f"{list(ds.schema.canonical_etypes)}")
+        print(f"[hetero] counts: {counts}")
+        print(f"[hetero] per-relation fanouts: {fanouts}")
     job = TrainJobConfig(
         num_machines=args.machines,
         trainers_per_machine=args.trainers_per_machine,
@@ -93,6 +122,11 @@ def main():
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--hetero", action="store_true",
+                    help="typed-relation path: per-relation fanouts, "
+                         "per-ntype KVStore policies (schema'd datasets)")
+    ap.add_argument("--rel-fanout", action="append", metavar="REL=K",
+                    help="override one relation's fanout (repeatable)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--sync", action="store_true")
     ap.add_argument("--no-nonstop", action="store_true")

@@ -55,21 +55,35 @@ def gat_layer(params, h_src: jnp.ndarray, block: dict, num_dst: int,
 
 def rgcn_layer(params, h_src: jnp.ndarray, block: dict, num_dst: int,
                num_rels: int, activation=jax.nn.relu,
-               impl: str = "auto") -> jnp.ndarray:
+               impl: str = "auto", rel_offsets=None) -> jnp.ndarray:
     """RGCN: h_v = act(W_0 h_v + sum_r (1/c_{v,r}) sum_{u in N_r(v)} W_r h_u).
 
     params: w_rel (R, d_in, d_out), w_self (d_in, d_out), b (d_out,).
-    Relations are looped (R is small and static); each relation reuses the
-    masked segment-sum kernel with its own etype mask.
+    Relations are looped (R is small and static). Two block layouts:
+
+    * typed (relation-major, ``rel_offsets`` a static (R+1,) tuple from the
+      sampler's per-relation capacities): relation r's edges occupy the
+      static slot range ``[rel_offsets[r], rel_offsets[r+1])``, so each
+      relation's masked segment-sum runs over only its own slots — the
+      edge axis per relation shrinks from sum(f_r) to f_r per dst;
+    * untyped (legacy): one fused edge axis, each relation re-scans it with
+      its own ``edge_types == r`` mask.
     """
     edge_src, edge_dst = block["edge_src"], block["edge_dst"]
     edge_mask, edge_types = block["edge_mask"], block["edge_types"]
     out = h_src[:num_dst] @ params["w_self"] + params["b"]
     for r in range(num_rels):
-        rmask = edge_mask & (edge_types == r)
+        if rel_offsets is not None:
+            lo, hi = int(rel_offsets[r]), int(rel_offsets[r + 1])
+            if hi == lo:          # relation not sampled at this layer
+                continue
+            es, ed, em = edge_src[lo:hi], edge_dst[lo:hi], edge_mask[lo:hi]
+        else:
+            es, ed = edge_src, edge_dst
+            em = edge_mask & (edge_types == r)
         proj = h_src @ params["w_rel"][r]                   # (cap_src, d_out)
-        msg = proj[edge_src]
-        agg = segment_sum(msg, edge_dst, rmask, num_dst, impl=impl)
-        agg = agg / _degrees(edge_dst, rmask, num_dst)[:, None]
+        msg = proj[es]
+        agg = segment_sum(msg, ed, em, num_dst, impl=impl)
+        agg = agg / _degrees(ed, em, num_dst)[:, None]
         out = out + agg
     return activation(out) if activation is not None else out

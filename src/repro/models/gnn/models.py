@@ -15,13 +15,13 @@ The static per-layer dst capacities come from the sampler's ``capacities``
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core.sampler.mfg import capacities
+from ...core.sampler.mfg import Fanout, capacities, relation_capacities
 from .layers import gat_layer, rgcn_layer, sage_layer
 
 
@@ -37,7 +37,7 @@ class GNNConfig:
     in_dim: int
     hidden_dim: int
     num_classes: int
-    fanouts: Sequence[int]          # input-layer first
+    fanouts: Sequence[Fanout]       # input-layer first; int or {etype: f}
     batch_size: int
     num_heads: int = 2              # GAT (paper: 2 heads)
     num_rels: int = 1               # RGCN
@@ -47,11 +47,27 @@ class GNNConfig:
     def num_layers(self) -> int:
         return len(self.fanouts)
 
+    @property
+    def typed(self) -> bool:
+        """Any layer with per-relation fanouts => relation-major blocks."""
+        return any(isinstance(f, Mapping) for f in self.fanouts)
+
     def dst_caps(self) -> List[int]:
         """Static dst-node capacity per layer (input-layer first)."""
         caps = capacities(self.batch_size, self.fanouts)
         dst = [c[0] for c in caps[1:]] + [self.batch_size]
         return dst
+
+    def layer_rel_offsets(self, etype_id=None) -> List[Optional[tuple]]:
+        """Static per-layer relation slot offsets (input-layer first);
+        None entries for untyped layers. Mapping keys are relation IDs by
+        default; pass a schema's ``etype_id`` for name keys. These are the
+        SAME numbers the sampler pads with — model and sampler must agree,
+        which is why both derive them from (batch_size, fanouts)."""
+        offs = relation_capacities(self.batch_size, self.fanouts,
+                                   self.num_rels, etype_id=etype_id)
+        return [None if o is None else tuple(int(x) for x in o)
+                for o in offs]
 
 
 def init_gnn(cfg: GNNConfig, rng: jax.Array) -> dict:
@@ -94,10 +110,17 @@ def init_gnn(cfg: GNNConfig, rng: jax.Array) -> dict:
     return params
 
 
-def apply_gnn(cfg: GNNConfig, params: dict, batch: dict) -> jnp.ndarray:
-    """Forward pass -> (batch_size, num_classes) logits."""
+def apply_gnn(cfg: GNNConfig, params: dict, batch: dict,
+              etype_id=None) -> jnp.ndarray:
+    """Forward pass -> (batch_size, num_classes) logits.
+
+    Relation slot offsets are static (derived from cfg, not from the batch)
+    so typed blocks never leak shape information into the traced arrays.
+    """
     h = batch["input_feats"]
     dst_caps = cfg.dst_caps()
+    rel_offs = cfg.layer_rel_offsets(etype_id) if cfg.typed else (
+        [None] * cfg.num_layers)
     for l, block in enumerate(batch["blocks"]):
         p = params["layers"][l]
         num_dst = dst_caps[l]
@@ -112,7 +135,8 @@ def apply_gnn(cfg: GNNConfig, params: dict, batch: dict) -> jnp.ndarray:
                           impl=cfg.impl)
         elif cfg.arch == "rgcn":
             h = rgcn_layer(p, h, block, num_dst, cfg.num_rels,
-                           activation=act, impl=cfg.impl)
+                           activation=act, impl=cfg.impl,
+                           rel_offsets=rel_offs[l])
     if "head" in params:
         h = h @ params["head"]
     return h

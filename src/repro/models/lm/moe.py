@@ -102,7 +102,9 @@ def _moe_sharded(p: dict, x: jnp.ndarray, cfg, mesh):
     batch_sharded = b % ba_size == 0
     b_loc = b // ba_size if batch_sharded else b
     t = b_loc * s                       # tokens per data shard (post-gather)
-    cap = int(cfg.moe_capacity_factor * t * k / e_pad) + 1
+    # capacity per expert is relative to the REAL expert count: padded dummy
+    # experts are never routed to, so the live experts carry T·k/e each
+    cap = int(cfg.moe_capacity_factor * t * k / e) + 1
     l_static = cap * e_loc
 
     def pad_e(w):
@@ -242,9 +244,12 @@ def _moe_sharded_a2a(p: dict, x: jnp.ndarray, cfg, mesh):
     b_loc = b // ba_size
     s_loc = s // msize
     t_loc = b_loc * s_loc                       # tokens per DEVICE
-    # per-(src,dst-rank) wire capacity and per-expert compute capacity
-    c2 = int(cf * t_loc * k / msize) + 1
-    cap = int(cf * t_loc * k * msize / e_pad) + 1   # rows/expert at receiver
+    # per-(src,dst-rank) wire capacity and per-expert compute capacity.
+    # Both scale with the REAL expert count e: padded dummy experts receive
+    # no tokens, so a rank owning e_loc experts sees ~t_loc·k·e_loc/e rows
+    # and each live expert ~cf·T·k/e.
+    c2 = int(cf * t_loc * k * e_loc / e) + 1
+    cap = int(cf * t_loc * k * msize / e) + 1   # rows/expert at receiver
 
     def pad_e(w):
         return jnp.pad(w, ((0, e_pad - e),) + ((0, 0),) * (w.ndim - 1))

@@ -30,8 +30,8 @@ import numpy as np
 
 from ..core.kvstore import (DistKVStore, NetworkModel, PartitionPolicy,
                             Transport)
-from ..core.partition import (hierarchical_partition, locality_report,
-                              split_training_set)
+from ..core.partition import (build_typed_partition, hierarchical_partition,
+                              locality_report, split_training_set)
 from ..core.pipeline import MinibatchPipeline
 from ..core.sampler import DistributedSampler
 from ..graph.datasets import GraphDataset
@@ -71,12 +71,37 @@ class DistGNNTrainer:
         self.transport = Transport(job.network or NetworkModel())
         feats_new = ds.feats[book.new2old_node]
         self.labels_new = ds.labels[book.new2old_node]
-        self.store = DistKVStore(
-            {"node": PartitionPolicy("node", book.node_offsets),
-             "edge": PartitionPolicy("edge", book.edge_offsets)},
-            transport=self.transport)
-        self.store.init_data("feat", feats_new.shape[1:], np.float32, "node",
-                             full_array=feats_new)
+
+        # heterograph path: typed per-ntype/per-etype policies + per-ntype
+        # feature tensors; activated by a schema'd dataset + per-relation
+        # fanouts in the model config (an int-fanout config on the same
+        # dataset keeps the legacy fused path)
+        self.schema = getattr(ds, "schema", None)
+        self.hetero = self.schema is not None and model_cfg.typed
+        policies = {"node": PartitionPolicy("node", book.node_offsets),
+                    "edge": PartitionPolicy("edge", book.edge_offsets)}
+        self.typed = None
+        if self.hetero:
+            g = ds.graph
+            ntypes_new = (None if g.ntypes is None
+                          else g.ntypes[book.new2old_node])
+            etypes_new = (None if g.etypes is None
+                          else g.etypes[book.new2old_edge])
+            self.typed = build_typed_partition(book, self.schema,
+                                               ntypes_new, etypes_new)
+            policies.update(self.typed.policies())
+        self.store = DistKVStore(policies, transport=self.transport)
+        if self.hetero:
+            # each node type registers its own tensor under its own policy;
+            # rows are type-local, ordered to match the policy's offsets
+            for t, nt in enumerate(self.schema.ntypes):
+                rows = ds.feats[book.new2old_node[self.typed.type2node[t]]]
+                self.store.init_data(f"feat:{nt}", rows.shape[1:],
+                                     np.float32, f"node:{nt}",
+                                     full_array=rows)
+        else:
+            self.store.init_data("feat", feats_new.shape[1:], np.float32,
+                                 "node", full_array=feats_new)
 
         # per-trainer seed split (§5.6.1)
         train_new = book.old2new_node[ds.train_nids]
@@ -90,16 +115,20 @@ class DistGNNTrainer:
         self.pipelines: List[MinibatchPipeline] = []
         for ti in range(self.num_trainers):
             machine = ti // job.trainers_per_machine
-            s = DistributedSampler(book, self.hp.partitions, model_cfg.fanouts,
-                                   model_cfg.batch_size, machine=machine,
-                                   transport=self.transport,
-                                   seed=job.seed + 100 + ti)
+            s = DistributedSampler(
+                book, self.hp.partitions, model_cfg.fanouts,
+                model_cfg.batch_size, machine=machine,
+                transport=self.transport, seed=job.seed + 100 + ti,
+                schema=self.schema if self.hetero else None,
+                ntype_of_node=(self.typed.ntype_of_node
+                               if self.hetero else None))
             seeds = self.trainer_seeds[ti]
             p = MinibatchPipeline(
                 s, self.store.client(machine), "feat", seeds,
                 labels=self.labels_new[seeds], sync=job.sync,
                 non_stop=job.non_stop, depths=job.pipeline_depths,
-                to_device=False, seed=job.seed + 200 + ti)
+                to_device=False, seed=job.seed + 200 + ti,
+                typed=self.typed)
             self.samplers.append(s)
             self.pipelines.append(p)
         self.batches_per_epoch = min(p.batches_per_epoch for p in self.pipelines)
@@ -116,11 +145,12 @@ class DistGNNTrainer:
     # ------------------------------------------------------------------
     def _build_step(self):
         cfg, lr = self.cfg, self.job.lr
+        etype_id = self.schema.etype_id if self.hetero else None
 
         @jax.jit
         def step(params, opt, stacked):
             def loss_one(p, batch):
-                logits = apply_gnn(cfg, p, batch)
+                logits = apply_gnn(cfg, p, batch, etype_id=etype_id)
                 return (nc_loss(logits, batch["labels"], batch["seed_mask"]),
                         nc_accuracy(logits, batch["labels"], batch["seed_mask"]))
 
@@ -173,15 +203,29 @@ class DistGNNTrainer:
     def evaluate(self, nids_old: np.ndarray, max_batches: int = 50) -> float:
         book = self.hp.book
         nids = book.old2new_node[np.asarray(nids_old)]
-        sampler = self.samplers[0]
+        # dedicated sampler: the trainers' samplers are owned by their
+        # (possibly still running, non_stop) pipeline sampling threads —
+        # sharing one would race the RNG and stats
+        sampler = DistributedSampler(
+            book, self.hp.partitions, self.cfg.fanouts, self.cfg.batch_size,
+            machine=0, seed=self.job.seed + 999,
+            schema=self.schema if self.hetero else None,
+            ntype_of_node=self.typed.ntype_of_node if self.hetero else None)
         client = self.store.client(0)
         accs = []
         bs = self.cfg.batch_size
         for b in range(min(max_batches, len(nids) // bs)):
             chunk = nids[b * bs:(b + 1) * bs]
             mb = sampler.sample(chunk, labels=self.labels_new[chunk])
-            mb.input_feats = client.pull("feat", mb.input_gids)
-            logits = apply_gnn(self.cfg, self.params, self._device_batch(mb))
+            if self.hetero:
+                mb.input_feats = client.pull_typed("feat", mb.input_gids,
+                                                   self.typed,
+                                                   ntypes=mb.input_ntypes)
+            else:
+                mb.input_feats = client.pull("feat", mb.input_gids)
+            logits = apply_gnn(self.cfg, self.params, self._device_batch(mb),
+                               etype_id=self.schema.etype_id
+                               if self.hetero else None)
             accs.append(float(nc_accuracy(logits, jnp.asarray(mb.labels),
                                           jnp.asarray(mb.seed_mask))))
         return float(np.mean(accs)) if accs else float("nan")
@@ -193,7 +237,12 @@ class DistGNNTrainer:
     def sampling_stats(self) -> dict:
         remote = sum(s.stats.seeds_remote for s in self.samplers)
         total = sum(s.stats.seeds_total for s in self.samplers)
-        return {"remote_seed_frac": remote / max(total, 1),
-                "transport": self.transport.stats(),
-                "mean_seed_locality": self.locality["mean_local_frac"],
-                "partition_time_s": self.partition_time_s}
+        out = {"remote_seed_frac": remote / max(total, 1),
+               "transport": self.transport.stats(),
+               "mean_seed_locality": self.locality["mean_local_frac"],
+               "partition_time_s": self.partition_time_s}
+        if self.hetero:
+            per = sum(s.stats.edges_per_etype for s in self.samplers)
+            out["edges_per_etype"] = {
+                rel: int(per[r]) for r, rel in enumerate(self.schema.etypes)}
+        return out

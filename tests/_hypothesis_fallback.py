@@ -1,0 +1,127 @@
+"""Minimal stand-in for the ``hypothesis`` API surface these tests use.
+
+Loaded by ``conftest.py`` only when the real library is missing (offline
+hosts): deterministic seeded random sampling replaces Hypothesis's guided
+search and shrinking, which is enough to keep the property tests running
+as randomized regression tests. CI installs the real package from
+``requirements-dev.txt`` and never sees this module.
+
+Supported surface: ``@settings(max_examples=, deadline=)``, ``@given`` with
+strategy kwargs or a single positional ``st.data()``, and the strategies
+``integers``, ``floats``, ``booleans``, ``lists``, ``sampled_from``,
+``data`` (with ``data.draw``).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+
+class Strategy:
+    def __init__(self, sample_fn, label="strategy"):
+        self._sample = sample_fn
+        self._label = label
+
+    def sample(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+    def __repr__(self):
+        return f"<shim {self._label}>"
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)),
+                    f"integers({min_value},{max_value})")
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> Strategy:
+    return Strategy(
+        lambda rng: float(min_value + rng.random() * (max_value - min_value)),
+        "floats")
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans")
+
+
+def sampled_from(options) -> Strategy:
+    options = list(options)
+    return Strategy(lambda rng: options[int(rng.integers(0, len(options)))],
+                    "sampled_from")
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.sample(rng) for _ in range(n)]
+    return Strategy(sample, f"lists[{min_size},{max_size}]")
+
+
+class _DataObject:
+    """The object a ``st.data()`` strategy hands to the test body."""
+
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy, label=None):
+        return strategy.sample(self._rng)
+
+
+class _DataStrategy(Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng), "data")
+
+
+def data() -> Strategy:
+    return _DataStrategy()
+
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+            # deterministic per-test seed stream, independent of run order
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.default_rng((base, i))
+                pos = tuple(s.sample(rng) for s in arg_strategies)
+                kws = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                fn(*args, *pos, **kwargs, **kws)
+        # hide the wrapped signature: pytest must not treat the strategy
+        # parameters as fixtures (real hypothesis does the same)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+def install() -> types.ModuleType:
+    """Register this shim as ``hypothesis`` (+``hypothesis.strategies``)."""
+    import sys
+    hyp = types.ModuleType("hypothesis")
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "lists", "sampled_from",
+                 "data"):
+        setattr(strategies, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strategies
+    hyp.__is_shim__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies
+    return hyp

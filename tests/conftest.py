@@ -3,3 +3,12 @@ import sys
 
 # allow `pytest tests/` from the repo root without PYTHONPATH
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Offline hosts don't have hypothesis (see requirements-dev.txt); install a
+# minimal API-compatible shim so the property-test modules stay collectible.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+    _hypothesis_fallback.install()

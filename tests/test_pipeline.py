@@ -51,6 +51,48 @@ def test_async_pipeline_error_propagates():
         list(AsyncPipeline(range(10), [Stage("b", boom, depth=2)]))
 
 
+def test_stop_joins_threads_blocked_on_full_queues():
+    # Depth-1 queues + an abandoned consumer: every stage ends up blocked
+    # on put() into a full queue. stop() must wake and join them all.
+    stages = [Stage("a", lambda x: x, depth=1), Stage("b", lambda x: x, depth=1)]
+    p = AsyncPipeline(range(100000), stages)
+    it = iter(p)
+    next(it)                    # start threads, then abandon the iterator
+    time.sleep(0.1)             # queues fill; producers block on put()
+    threads = list(p._threads)
+    p.stop(timeout=5.0)
+    assert all(not t.is_alive() for t in threads)
+
+
+def test_stop_does_not_leak_thread_stuck_mid_stage_fn():
+    # A worker still inside fn() when stop()'s join window expires must
+    # still exit afterwards (its input get() re-checks the stop flag).
+    import threading
+    started = threading.Event()
+
+    def slow(x):
+        started.set()
+        time.sleep(0.5)
+        return x
+
+    p = AsyncPipeline(range(10), [Stage("slow", slow, depth=1)])
+    it = iter(p)
+    next(it)
+    started.clear()
+    started.wait(timeout=2.0)          # a later item is mid-fn
+    threads = list(p._threads)
+    p.stop(timeout=0.05)               # expires while fn still sleeping
+    time.sleep(1.0)                    # fn returns; worker must then exit
+    assert all(not t.is_alive() for t in threads)
+
+
+def test_stop_idempotent_and_safe_after_drain():
+    p = AsyncPipeline(range(5), [Stage("x", lambda x: x, depth=2)])
+    assert list(p) == list(range(5))
+    p.stop()
+    p.stop()
+
+
 def test_stage_stats_recorded():
     p = AsyncPipeline(range(10), [Stage("w", lambda x: x, depth=2)])
     list(p)
@@ -76,7 +118,7 @@ def world():
     return ds, hp, store, tp, seeds, labels_new
 
 
-def _run(world, sync, non_stop, epochs=3):
+def _run(world, sync, non_stop, epochs=3, consume_s=0.008):
     ds, hp, store, tp, seeds, labels_new = world
     sampler = DistributedSampler(hp.book, hp.partitions, [10, 5], 32,
                                  machine=0, transport=tp, seed=0)
@@ -87,7 +129,7 @@ def _run(world, sync, non_stop, epochs=3):
     got = []
     for e in range(epochs):
         for mb in pipe.epoch(e):
-            time.sleep(0.004)
+            time.sleep(consume_s)   # stands in for the jitted train step
             got.append(mb)
     dt = time.perf_counter() - t0
     pipe.stop()
@@ -104,8 +146,11 @@ def test_minibatch_pipeline_same_count_all_modes(world):
 
 
 def test_minibatch_pipeline_async_faster_than_sync(world):
-    t_sync, _ = _run(world, True, False)
-    t_async, _ = _run(world, False, True)
+    # Wall-clock comparison on a busy 1-core host is noisy: take the best
+    # of 2 runs per mode. With the pipeline overlapping sampling/prefetch
+    # against the consumer's work, async must beat the serial loop.
+    t_sync = min(_run(world, True, False)[0] for _ in range(2))
+    t_async = min(_run(world, False, True)[0] for _ in range(2))
     assert t_async < t_sync
 
 
