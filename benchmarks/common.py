@@ -12,7 +12,7 @@ import time
 
 import numpy as np
 
-from repro.core.kvstore import NetworkModel
+from repro.core.kvstore import CacheConfig, NetworkModel
 from repro.graph import get_dataset
 from repro.models.gnn import GNNConfig
 from repro.training import DistGNNTrainer, TrainJobConfig
@@ -45,11 +45,13 @@ def hetero_cfg(ds, batch=16, fanouts=(5, 3), hidden=64):
 
 def make_trainer(ds, cfg, *, machines=2, tpm=2, method="metis",
                  use_level2=True, sync=False, non_stop=True, seed=0,
-                 network=True):
+                 network=True, cache_mb=0.0, cache_policy="clock"):
     job = TrainJobConfig(
         num_machines=machines, trainers_per_machine=tpm,
         partition_method=method, use_level2=use_level2, sync=sync,
         non_stop=non_stop, seed=seed,
+        cache=(CacheConfig.from_mb(cache_mb, policy=cache_policy)
+               if cache_mb > 0 else None),
         network=NetworkModel(**NET) if network else None)
     return DistGNNTrainer(ds, cfg, job)
 

@@ -25,6 +25,10 @@ MODES = [
                           non_stop=False)),
     ("distdglv2", dict(method="metis", use_level2=True, sync=False,
                        non_stop=True)),
+    # cache ablation column: the full system plus the per-trainer
+    # hot-vertex feature cache (64 MB, CLOCK) absorbing remote pulls
+    ("distdglv2+cache", dict(method="metis", use_level2=True, sync=False,
+                             non_stop=True, cache_mb=64.0)),
 ]
 
 

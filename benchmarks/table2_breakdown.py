@@ -19,8 +19,9 @@ from repro.checkpoint import save_kvstore, load_kvstore
 from repro.graph import get_dataset
 
 
-def _breakdown(tag: str, ds, cfg, t_load: float, epochs: int) -> dict:
-    tr = make_trainer(ds, cfg)           # partitions inside
+def _breakdown(tag: str, ds, cfg, t_load: float, epochs: int,
+               cache_mb: float = 0.0) -> dict:
+    tr = make_trainer(ds, cfg, cache_mb=cache_mb)   # partitions inside
     t_part = tr.partition_time_s
 
     with tempfile.TemporaryDirectory() as tmp:
@@ -51,21 +52,50 @@ def _breakdown(tag: str, ds, cfg, t_load: float, epochs: int) -> dict:
         csv_line(f"{tag}/edges_per_etype", float(sum(per.values())),
                  ";".join(f"{k}={v}" for k, v in per.items()))
     return dict(load=t_load, partition=t_part, ckpt=t_ckpt, train=t_train,
-                stages=stage_stats)
+                stages=stage_stats, sampling=sampling)
 
 
-def run(scale=12, epochs=2):
+def _cache_ablation(tag: str, ds, cfg, epochs: int, off: dict,
+                    cache_mb: float = 64.0) -> dict:
+    """Cache-on vs cache-off column: same workload with a per-trainer
+    hot-vertex cache; the paper-style metric is the remote-traffic
+    reduction relative to the uncached run (prewarm pulls included in the
+    cache-on total, so the saving reported is net)."""
+    on = _breakdown(f"{tag}/cache_on", ds, cfg, 0.0, epochs,
+                    cache_mb=cache_mb)
+    b_off = off["sampling"]["transport"]["remote_bytes"]
+    tp_on = on["sampling"]["transport"]
+    reduction = 1.0 - tp_on["remote_bytes"] / max(b_off, 1)
+    csv_line(f"{tag}/cache/remote_bytes_off", float(b_off))
+    csv_line(f"{tag}/cache/remote_bytes_on", float(tp_on["remote_bytes"]),
+             f"budget_mb={cache_mb}")
+    csv_line(f"{tag}/cache/saved_remote_bytes",
+             float(tp_on["saved_remote_bytes"]),
+             f"hit_rate={tp_on['cache_hit_rate']:.3f}")
+    csv_line(f"{tag}/cache/remote_traffic_reduction", reduction * 100.0,
+             "percent_vs_cache_off")
+    return dict(remote_bytes_off=b_off,
+                remote_bytes_on=tp_on["remote_bytes"],
+                saved=tp_on["saved_remote_bytes"], reduction=reduction)
+
+
+def run(scale=12, epochs=2, cache_mb=64.0):
     t0 = time.perf_counter()
     ds = get_dataset("product-sim", scale=scale)
     t_load = time.perf_counter() - t0
     cfg = small_cfg(in_dim=ds.feats.shape[1])
     out = {"homogeneous": _breakdown("table2", ds, cfg, t_load, epochs)}
+    out["homogeneous_cache"] = _cache_ablation(
+        "table2", ds, cfg, epochs, out["homogeneous"], cache_mb=cache_mb)
 
     t0 = time.perf_counter()
     ds_h = get_dataset("mag-hetero", scale=scale)
     t_load_h = time.perf_counter() - t0
     cfg_h = hetero_cfg(ds_h)
     out["hetero"] = _breakdown("table2/hetero", ds_h, cfg_h, t_load_h, epochs)
+    out["hetero_cache"] = _cache_ablation(
+        "table2/hetero", ds_h, cfg_h, epochs, out["hetero"],
+        cache_mb=cache_mb)
     return out
 
 

@@ -77,3 +77,12 @@ def load_kvstore(store, directory: str) -> None:
             dst = server.local_view(name)
             assert dst.shape == arr.shape, (name, dst.shape, arr.shape)
             dst[...] = arr
+    # a restore is a write like any other (DESIGN.md §5): bump mutable
+    # tensors' versions AND flush every live cache's entries — unlike
+    # pushes, a restore may rewrite even immutable tensors' bytes, so
+    # version refusal alone cannot cover it
+    for name in meta["names"]:
+        if store.is_mutable(name):
+            pol = store.policy_for(name)
+            store.bump_versions(name, np.arange(pol.total, dtype=np.int64))
+        store.invalidate_caches(name)

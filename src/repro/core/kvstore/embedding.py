@@ -39,8 +39,11 @@ class DistEmbedding:
         self.optim = optim or SparseAdamConfig()
         rng = np.random.default_rng(seed)
         scale = 1.0 / np.sqrt(dim)
+        # mutable=True: rows change under sparse-Adam pushes, so trainer
+        # caches must version-check them (immutable features skip this)
         store.init_data(name, (dim,), dtype, policy_name,
-                        init=lambda s: rng.standard_normal(s) * scale)
+                        init=lambda s: rng.standard_normal(s) * scale,
+                        mutable=True)
         store.init_data(name + "__m", (dim,), np.float32, policy_name)
         store.init_data(name + "__v", (dim,), np.float32, policy_name)
         store.init_data(name + "__t", (), np.int64, policy_name)
@@ -55,6 +58,10 @@ class DistEmbedding:
         row gets a single update — matching how DGL's sparse optimizer
         behaves under synchronous training.
         """
+        # the optimizer-state writes below bypass KVClient.push, so run
+        # its pre-write guard for every tensor this method mutates
+        for suffix in ("", "__m", "__v", "__t"):
+            self.store.check_writable(self.name + suffix)
         ids = np.asarray(ids, dtype=np.int64)
         uniq, inv = np.unique(ids, return_inverse=True)
         g = np.zeros((len(uniq), grad.shape[1]), dtype=np.float32)
@@ -87,3 +94,6 @@ class DistEmbedding:
                 store.transport.charge_local(nbytes)
             else:
                 store.transport.charge_remote(nbytes)
+        # AFTER the owners applied the update: bump versions + drop own
+        # cached copies (the shared writer protocol)
+        client.notify_write(self.name, uniq)

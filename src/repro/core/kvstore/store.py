@@ -11,6 +11,8 @@ updates back to the owning servers.
 from __future__ import annotations
 
 import dataclasses
+import threading
+import weakref
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
@@ -104,6 +106,21 @@ class DistKVStore:
         self.servers = [KVServer(p) for p in range(num_parts)]
         self.transport = transport or Transport()
         self._meta: Dict[str, tuple] = {}   # name -> (policy_name, dtype)
+        # per-row version counters for MUTABLE tensors only — the
+        # invalidation authority for trainer-side feature caches (in a real
+        # deployment this metadata rides the push acks / an invalidation
+        # broadcast; see DESIGN.md §5). Immutable tensors have no entry and
+        # pay zero version overhead.
+        self._versions: Dict[str, np.ndarray] = {}
+        self._version_lock = threading.Lock()
+        # tensors ANY trainer cache has registered (cache registration is
+        # global metadata, like the policies): writes to a cached tensor
+        # without a version table are refused up front — no client can see
+        # the other trainers' caches to invalidate them. The weak set of
+        # live caches exists for BULK rewrites (checkpoint restore), which
+        # legitimately replace even immutable bytes and must flush them.
+        self._cached_names: set = set()
+        self._cache_refs: "weakref.WeakSet" = weakref.WeakSet()
 
     @property
     def num_parts(self) -> int:
@@ -111,15 +128,63 @@ class DistKVStore:
 
     def init_data(self, name: str, shape_suffix: tuple, dtype, policy_name: str,
                   init: Optional[Callable[[tuple], np.ndarray]] = None,
-                  full_array: Optional[np.ndarray] = None) -> None:
+                  full_array: Optional[np.ndarray] = None,
+                  mutable: bool = False) -> None:
         pol = self.policies[policy_name]
         self._meta[name] = (policy_name, np.dtype(dtype))
+        if mutable:
+            self._versions[name] = np.zeros(pol.total, dtype=np.int64)
         for server in self.servers:
             rows = None
             if full_array is not None:
                 lo, hi = int(pol.offsets[server.part_id]), int(pol.offsets[server.part_id + 1])
                 rows = full_array[lo:hi]
             server.init_data(name, shape_suffix, dtype, pol, init=init, rows=rows)
+
+    # -- row versioning (cache invalidation authority) ------------------
+    def is_mutable(self, name: str) -> bool:
+        return name in self._versions
+
+    def note_cache_registration(self, name: str, cache=None) -> None:
+        """Called by FeatureCache.register; see check_writable."""
+        self._cached_names.add(name)
+        if cache is not None:
+            self._cache_refs.add(cache)
+
+    def invalidate_caches(self, name: str) -> None:
+        """Flush every live trainer cache's entries for ``name`` — the
+        bulk-rewrite path (checkpoint restore), where even immutable
+        tensors' bytes legitimately change."""
+        for cache in list(self._cache_refs):
+            cache.drop(name)
+
+    def check_writable(self, name: str) -> None:
+        """Refuse writes that would strand stale rows in SOME trainer's
+        cache: a cached tensor with no version table has no invalidation
+        channel. Runs BEFORE any server mutation."""
+        if name in self._cached_names and not self.is_mutable(name):
+            raise ValueError(
+                f"write to {name!r}, which is cached by a trainer but has "
+                f"no version table — register it with "
+                f"init_data(..., mutable=True)")
+
+    def versions_of(self, name: str, ids: np.ndarray) -> Optional[np.ndarray]:
+        """Current version counter per row, or None for immutable tensors."""
+        vers = self._versions.get(name)
+        if vers is None:
+            return None
+        with self._version_lock:
+            return vers[np.asarray(ids, dtype=np.int64)].copy()
+
+    def bump_versions(self, name: str, ids: np.ndarray) -> None:
+        """Called by writers AFTER applying an update, so a concurrent
+        reader can at worst stamp fresh data with a stale version (an
+        unnecessary refresh later) — never stale data with a fresh one."""
+        vers = self._versions.get(name)
+        if vers is None:
+            return
+        with self._version_lock:
+            np.add.at(vers, np.asarray(ids, dtype=np.int64), 1)
 
     def client(self, machine: int) -> "KVClient":
         return KVClient(self, machine)
@@ -133,13 +198,23 @@ class DistKVStore:
 
 
 class KVClient:
-    def __init__(self, store: DistKVStore, machine: int):
+    def __init__(self, store: DistKVStore, machine: int, cache=None):
         self.store = store
         self.machine = machine
+        self.cache = cache          # Optional[FeatureCache], per trainer
 
-    def pull(self, name: str, ids: np.ndarray) -> np.ndarray:
+    def attach_cache(self, cache) -> "KVClient":
+        """Attach a per-trainer hot-vertex cache (see kvstore.cache); only
+        tensors registered with the cache take the cached read path."""
+        self.cache = cache
+        return self
+
+    def pull(self, name: str, ids: np.ndarray, *,
+             _bypass_cache: bool = False) -> np.ndarray:
         """Gather rows by global ID. Local rows: direct view indexing
-        (shared memory). Remote rows: transport-charged server fetch."""
+        (shared memory). Remote rows: cache hits served trainer-side
+        (saved bytes credited to the transport accountant), misses via one
+        batched transport-charged fetch per owning server."""
         store = self.store
         pol = store.policy_for(name)
         ids = np.asarray(ids, dtype=np.int64)
@@ -148,8 +223,27 @@ class KVClient:
         sample = store.servers[self.machine].local_view(name)
         out = np.empty((len(ids),) + sample.shape[1:], dtype=sample.dtype)
         itemrow = sample.dtype.itemsize * int(np.prod(sample.shape[1:], initial=1))
+
+        cache = None if _bypass_cache else self.cache
+        if cache is not None and not cache.has(name):
+            cache = None
+        fetch = np.ones(len(ids), dtype=bool)
+        if cache is not None:
+            rem_idx = np.nonzero(parts != self.machine)[0]
+            if len(rem_idx):
+                hit, rows = cache.lookup(name, ids[rem_idx])
+                if hit.any():
+                    out[rem_idx[hit]] = rows
+                    fetch[rem_idx[hit]] = False
+                    store.transport.charge_cache_hit(
+                        int(hit.sum()) * itemrow, int(hit.sum()))
+                store.transport.charge_cache_miss(int((~hit).sum()))
+        # version snapshot BEFORE fetching, so a concurrent push can never
+        # stamp stale rows with a fresh version (see bump_versions)
+        pre_versions = (store.versions_of(name, ids)
+                        if cache is not None else None)
         for p in range(store.num_parts):
-            m = parts == p
+            m = (parts == p) & fetch
             if not m.any():
                 continue
             rows = store.servers[p].fetch(name, local_ids[m])
@@ -159,11 +253,16 @@ class KVClient:
                 store.transport.charge_local(nbytes)
             else:
                 store.transport.charge_remote(nbytes)
+                if cache is not None:
+                    cache.insert(name, ids[m], rows,
+                                 versions=None if pre_versions is None
+                                 else pre_versions[m])
         return out
 
     def push(self, name: str, ids: np.ndarray, values: np.ndarray,
              reduce: str = "sum") -> None:
         store = self.store
+        store.check_writable(name)   # before any server mutation
         pol = store.policy_for(name)
         ids = np.asarray(ids, dtype=np.int64)
         parts = pol.part_of(ids)
@@ -179,6 +278,18 @@ class KVClient:
                 store.transport.charge_local(nbytes)
             else:
                 store.transport.charge_remote(nbytes)
+        self.notify_write(name, ids)
+
+    def notify_write(self, name: str, ids: np.ndarray) -> None:
+        """Post-write protocol shared by every writer (``push``,
+        ``DistEmbedding.push_grad``, ...): bump the rows' version counters
+        so OTHER trainers' caches refuse their copies, and eagerly drop
+        this client's own entries. (``DistKVStore.check_writable`` — run
+        before the write — is what refuses cached-but-unversioned
+        tensors.)"""
+        self.store.bump_versions(name, ids)   # no-op for immutable tensors
+        if self.cache is not None and self.cache.has(name):
+            self.cache.invalidate(name, ids)
 
     def local_fraction(self, name: str, ids: np.ndarray) -> float:
         pol = self.store.policy_for(name)

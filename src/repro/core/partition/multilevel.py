@@ -192,11 +192,114 @@ def _initial_partition(level: _Level, k, eps, rng):
             break
         if not placed:
             active.remove(p)
-    # assign untouched vertices (disconnected or capacity-skipped)
+    # assign untouched vertices (disconnected or capacity-skipped):
+    # lightest part that still fits every constraint, falling back to the
+    # overall-lightest only when nothing fits (rebalance repairs later)
     for v in np.nonzero(parts < 0)[0]:
-        p = int(np.argmin(loads[:, 0] + loads.sum(axis=1)))
+        score = loads[:, 0] + loads.sum(axis=1)
+        fits = ((loads + level.vwgts[v]) <= caps).all(axis=1)
+        if fits.any():
+            score = np.where(fits, score, np.inf)
+        p = int(np.argmin(score))
         parts[v] = p
         loads[p] += level.vwgts[v]
+    return parts
+
+
+def _rebalance(level: _Level, parts, k, eps, max_passes=4):
+    """Drain overloaded partitions until every constraint is within the
+    ``_balance_caps`` envelope ``(1+eps)·total/k + max_vwgt``.
+
+    Refinement alone never repairs imbalance (it only refuses to worsen
+    it), and both the coarse-level granularity and the initial
+    partition's forced placements can overflow the caps. Each level runs
+    this after refinement, so successively finer granularity shaves the
+    overflow down to the finest level's vertex weights. Vertices leave an
+    overloaded part least-attached-first (minimum same-part edge weight),
+    landing on the feasible part they connect to most — the smallest cut
+    damage that restores balance.
+    """
+    caps = _balance_caps(level.vwgts, k, eps)
+    loads = np.zeros((k, level.vwgts.shape[1]), dtype=np.float64)
+    np.add.at(loads, parts, level.vwgts)
+    src, _ = _fine_coo(level)
+    for _ in range(max_passes):
+        over = np.nonzero((loads > caps + 1e-9).any(axis=1))[0]
+        if not len(over):
+            break
+        moved = 0
+        # same-part connectivity: how embedded each vertex is where it sits
+        own_w = np.zeros(len(parts), dtype=np.float64)
+        same = parts[src] == parts[level.indices]
+        np.add.at(own_w, src[same], level.ewgts[same])
+        for p in over:
+            verts = np.nonzero(parts == p)[0]
+            for v in verts[np.argsort(own_w[verts], kind="stable")]:
+                if (loads[p] <= caps + 1e-9).all():
+                    break
+                lo, hi = level.indptr[v], level.indptr[v + 1]
+                conn = np.zeros(k, dtype=np.float64)
+                np.add.at(conn, parts[level.indices[lo:hi]],
+                          level.ewgts[lo:hi])
+                feasible = ((loads + level.vwgts[v]) <= caps).all(axis=1)
+                feasible[p] = False
+                if not feasible.any():
+                    continue
+                conn = np.where(feasible, conn, -np.inf)
+                best = int(np.argmax(conn))
+                parts[v] = best
+                loads[p] -= level.vwgts[v]
+                loads[best] += level.vwgts[v]
+                moved += 1
+        if moved == 0:
+            break
+    # best-effort phase: strict feasibility can dead-end — e.g. two parts
+    # over the COUNT cap while two others are over the DEGREE cap, so no
+    # single receiver is feasible and the tied maximum never strictly
+    # drops. Descend a potential Φ = Σ_{p,c} excess(p,c)² instead (excess
+    # in units of the cap): any move that strictly shrinks TOTAL excess is
+    # taken, which walks through tied-maximum plateaus and trades hub
+    # vertices one way for light vertices the other.
+    def _phi_part(load):
+        ex = np.maximum(load / caps - 1.0, 0.0)
+        return float((ex * ex).sum())
+
+    # bounded move count: each iteration re-derives candidates with
+    # per-part argsorts, so an O(n) bound would be O(n² log n) at the
+    # finest level; the residual past a few hundred single-row moves is
+    # within the property-tested 2·vmax slack anyway
+    for _ in range(min(4 * len(parts), 512)):
+        over = np.nonzero((loads > caps + 1e-9).any(axis=1))[0]
+        if not len(over):
+            break
+        best_move, best_dphi = None, -1e-12
+        for p in over:
+            verts = np.nonzero(parts == p)[0]
+            # candidates: the heaviest vertices on each violated
+            # constraint (hubs shift load fastest) + a light-vertex tail
+            # (fine-grained count adjustment)
+            cand: list = []
+            for c in np.nonzero(loads[p] > caps + 1e-9)[0]:
+                w = level.vwgts[verts, c]
+                cand.extend(verts[np.argsort(-w, kind="stable")[:8]])
+            cand.extend(verts[np.argsort(
+                level.vwgts[verts].sum(axis=1), kind="stable")[:32]])
+            phi_p = _phi_part(loads[p])
+            for v in dict.fromkeys(int(x) for x in cand):
+                d_p = _phi_part(loads[p] - level.vwgts[v]) - phi_p
+                for q in range(k):
+                    if q == p:
+                        continue
+                    d_q = (_phi_part(loads[q] + level.vwgts[v])
+                           - _phi_part(loads[q]))
+                    if d_p + d_q < best_dphi:
+                        best_move, best_dphi = (v, p, q), d_p + d_q
+        if best_move is None:
+            break
+        v, p, q = best_move
+        parts[v] = q
+        loads[p] -= level.vwgts[v]
+        loads[q] += level.vwgts[v]
     return parts
 
 
@@ -276,9 +379,11 @@ def partition_graph(g: CSRGraph, k: int, *,
 
     parts = _initial_partition(levels[-1], k, eps, rng)
     parts = _refine(levels[-1], parts, k, eps, passes=max(refine_passes, 2))
+    parts = _rebalance(levels[-1], parts, k, eps)
     for fine, coarse in zip(levels[-2::-1], levels[:0:-1]):
         parts = parts[coarse.cmap]
         parts = _refine(fine, parts, k, eps, passes=refine_passes)
+        parts = _rebalance(fine, parts, k, eps)
     return parts.astype(np.int32)
 
 

@@ -49,7 +49,8 @@ class MinibatchPipeline:
                  batch_size: Optional[int] = None,
                  depths: dict | None = None,
                  sync: bool = False, non_stop: bool = True,
-                 to_device: bool = True, seed: int = 0, typed=None):
+                 to_device: bool = True, seed: int = 0, typed=None,
+                 cache=None):
         self.sampler = sampler
         self.kv_client = kv_client
         self.feat_name = feat_name
@@ -57,6 +58,12 @@ class MinibatchPipeline:
         # per node type ("<feat_name>:<ntype>") and the prefetch stage
         # routes each type through its own policy
         self.typed = typed
+        # per-trainer hot-vertex cache (kvstore.cache): the CPU-prefetch
+        # stage's pulls consult it for remote rows; hits never touch the
+        # transport. None = uncached (byte-identical batches either way).
+        self.cache = cache
+        if cache is not None:
+            kv_client.attach_cache(cache)
         self.seeds = np.asarray(seeds, dtype=np.int64)
         self.labels = labels
         self.batch_size = batch_size or sampler.batch_size

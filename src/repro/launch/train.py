@@ -25,7 +25,7 @@ def run_gnn(args):
     from ..configs import get_config
     from ..graph import get_dataset
     from ..training import DistGNNTrainer, TrainJobConfig
-    from ..core.kvstore import NetworkModel
+    from ..core.kvstore import CacheConfig, NetworkModel
 
     cfg = get_config(args.arch)
     ds = get_dataset(args.dataset, scale=args.scale)
@@ -60,11 +60,14 @@ def run_gnn(args):
               f"{list(ds.schema.canonical_etypes)}")
         print(f"[hetero] counts: {counts}")
         print(f"[hetero] per-relation fanouts: {fanouts}")
+    cache = (CacheConfig.from_mb(args.cache_budget_mb,
+                                 policy=args.cache_policy)
+             if args.cache_budget_mb > 0 else None)
     job = TrainJobConfig(
         num_machines=args.machines,
         trainers_per_machine=args.trainers_per_machine,
         partition_method=args.partition, sync=args.sync,
-        non_stop=not args.no_nonstop,
+        non_stop=not args.no_nonstop, cache=cache,
         network=NetworkModel(sleep=args.simulate_network))
     tr = DistGNNTrainer(ds, cfg, job)
     print(f"[train] {args.arch} on {args.dataset}: "
@@ -127,6 +130,12 @@ def main():
                          "per-ntype KVStore policies (schema'd datasets)")
     ap.add_argument("--rel-fanout", action="append", metavar="REL=K",
                     help="override one relation's fanout (repeatable)")
+    ap.add_argument("--cache-budget-mb", type=float, default=0.0,
+                    help="per-trainer hot-vertex feature cache budget in "
+                         "MB (0 disables the cache)")
+    ap.add_argument("--cache-policy", default="clock",
+                    choices=["clock", "lru"],
+                    help="feature-cache eviction policy")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--sync", action="store_true")
     ap.add_argument("--no-nonstop", action="store_true")

@@ -28,8 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.kvstore import (DistKVStore, NetworkModel, PartitionPolicy,
-                            Transport)
+from ..core.kvstore import (CacheConfig, DistKVStore, FeatureCache,
+                            NetworkModel, PartitionPolicy, Transport,
+                            halo_access_counts)
 from ..core.partition import (build_typed_partition, hierarchical_partition,
                               locality_report, split_training_set)
 from ..core.pipeline import MinibatchPipeline
@@ -50,6 +51,7 @@ class TrainJobConfig:
     lr: float = 3e-3
     network: Optional[NetworkModel] = None
     pipeline_depths: Optional[dict] = None
+    cache: Optional[CacheConfig] = None  # per-trainer hot-vertex cache
     seed: int = 0
 
 
@@ -109,10 +111,11 @@ class DistGNNTrainer:
             self.hp, train_new, use_level2=job.use_level2, seed=job.seed)
         self.locality = locality_report(self.hp, self.trainer_seeds)
 
-        # per-trainer samplers + pipelines
+        # per-trainer samplers + pipelines (+ optional hot-vertex caches)
         self.num_trainers = self.hp.num_trainers
         self.samplers: List[DistributedSampler] = []
         self.pipelines: List[MinibatchPipeline] = []
+        self.caches: List[Optional[FeatureCache]] = []
         for ti in range(self.num_trainers):
             machine = ti // job.trainers_per_machine
             s = DistributedSampler(
@@ -122,15 +125,18 @@ class DistGNNTrainer:
                 schema=self.schema if self.hetero else None,
                 ntype_of_node=(self.typed.ntype_of_node
                                if self.hetero else None))
+            client = self.store.client(machine)
+            cache = self._build_cache(client, machine) if job.cache else None
             seeds = self.trainer_seeds[ti]
             p = MinibatchPipeline(
-                s, self.store.client(machine), "feat", seeds,
+                s, client, "feat", seeds,
                 labels=self.labels_new[seeds], sync=job.sync,
                 non_stop=job.non_stop, depths=job.pipeline_depths,
                 to_device=False, seed=job.seed + 200 + ti,
-                typed=self.typed)
+                typed=self.typed, cache=cache)
             self.samplers.append(s)
             self.pipelines.append(p)
+            self.caches.append(cache)
         self.batches_per_epoch = min(p.batches_per_epoch for p in self.pipelines)
         if self.batches_per_epoch < 1:
             raise ValueError(
@@ -141,6 +147,33 @@ class DistGNNTrainer:
         self.params = init_gnn(model_cfg, jax.random.key(job.seed))
         self.opt = adamw_init(self.params)
         self._step = self._build_step()
+
+    # ------------------------------------------------------------------
+    def _build_cache(self, client, machine: int) -> FeatureCache:
+        """One trainer's hot-vertex cache over remote feature rows,
+        registered for every feature tensor and (optionally) pre-warmed
+        from the machine partition's halo access counts — the partition
+        book's static prediction of which remote rows the sampler will
+        keep pulling (§5.3's locality argument, attacked from the other
+        side)."""
+        cache = FeatureCache(self.job.cache, self.store)
+        names = ([f"feat:{nt}" for nt in self.schema.ntypes]
+                 if self.hetero else ["feat"])
+        for name in names:
+            cache.register(self.store, name)
+        # NOTE: MinibatchPipeline(cache=...) owns the client<->cache
+        # binding; warm() pulls with _bypass_cache and needs no attach
+        if self.job.cache.prewarm:
+            gids, counts = halo_access_counts(self.hp.partitions[machine])
+            if self.hetero:
+                types, tids = self.typed.nid2typed(gids)
+                for t, nt in enumerate(self.schema.ntypes):
+                    m = types == t
+                    if m.any():
+                        cache.warm(client, f"feat:{nt}", tids[m], counts[m])
+            else:
+                cache.warm(client, "feat", gids, counts)
+        return cache
 
     # ------------------------------------------------------------------
     def _build_step(self):
@@ -241,6 +274,18 @@ class DistGNNTrainer:
                "transport": self.transport.stats(),
                "mean_seed_locality": self.locality["mean_local_frac"],
                "partition_time_s": self.partition_time_s}
+        live = [c for c in self.caches if c is not None]
+        if live:
+            per = [c.stats() for c in live]
+            hits = sum(p["hits"] for p in per)
+            misses = sum(p["misses"] for p in per)
+            out["cache"] = {
+                "hit_rate": hits / max(hits + misses, 1),
+                "used_bytes": sum(p["used_bytes"] for p in per),
+                "evictions": sum(p["evictions"] for p in per),
+                "stale_hits": sum(p["stale_hits"] for p in per),
+                "per_trainer": per,
+            }
         if self.hetero:
             per = sum(s.stats.edges_per_etype for s in self.samplers)
             out["edges_per_etype"] = {

@@ -1,0 +1,313 @@
+"""Hot-vertex feature cache (kvstore.cache): correctness is byte-identity
+with the uncached read path under every policy/budget/access pattern; the
+rest is accounting (hits, saved bytes), the byte budget, admission,
+eviction order, halo pre-warm, and versioned invalidation.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kvstore import (CacheConfig, DistKVStore, FeatureCache,
+                                PartitionPolicy, halo_access_counts)
+from repro.core.partition import build_partitions
+from repro.core.partition.multilevel import partition_graph
+from repro.graph import rmat_graph
+
+N, F = 60, 5
+OFFSETS = np.array([0, 20, 45, 60])
+ROW_BYTES = F * 4
+
+
+def _store(seed=0):
+    pol = PartitionPolicy("node", OFFSETS)
+    s = DistKVStore({"node": pol})
+    full = np.random.default_rng(seed).standard_normal((N, F)).astype(np.float32)
+    s.init_data("feat", (F,), np.float32, "node", full_array=full)
+    return s, full
+
+
+def _cached_client(store, machine=0, **cfg_kw):
+    cfg_kw.setdefault("budget_bytes", 1 << 20)
+    cache = FeatureCache(CacheConfig(**cfg_kw), store)
+    cache.register(store, "feat")
+    return store.client(machine).attach_cache(cache), cache
+
+
+# ---------------------------------------------------------------------------
+# correctness: cached == uncached, always
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_cached_pull_byte_identical_property(data):
+    policy = data.draw(st.sampled_from(["clock", "lru"]))
+    budget_rows = data.draw(st.integers(1, N))
+    machine = data.draw(st.integers(0, 2))
+    n_pulls = data.draw(st.integers(1, 8))
+    store, full = _store(seed=data.draw(st.integers(0, 50)))
+    client, cache = _cached_client(store, machine, policy=policy,
+                                   budget_bytes=budget_rows * ROW_BYTES)
+    rng = np.random.default_rng(data.draw(st.integers(0, 1000)))
+    for _ in range(n_pulls):
+        ids = rng.integers(0, N, size=int(rng.integers(1, 40)))
+        got = client.pull("feat", ids)
+        assert np.array_equal(got, full[ids])
+        st_ = cache.stats()
+        assert st_["used_bytes"] <= budget_rows * ROW_BYTES
+
+
+def test_budget_is_respected_and_eviction_counted():
+    store, full = _store()
+    client, cache = _cached_client(store, budget_bytes=4 * ROW_BYTES)
+    ids = np.arange(20, 45)           # 25 remote rows for machine 0
+    assert np.array_equal(client.pull("feat", ids), full[ids])
+    assert np.array_equal(client.pull("feat", ids), full[ids])
+    st_ = cache.stats()
+    assert st_["used_bytes"] <= 4 * ROW_BYTES
+    assert st_["rows"]["feat"] <= 4
+    assert st_["evictions"] > 0
+
+
+def test_local_rows_never_cached_or_counted():
+    store, full = _store()
+    client, cache = _cached_client(store, machine=1)
+    local = np.arange(20, 45)          # machine 1 owns [20, 45)
+    client.pull("feat", local)
+    client.pull("feat", local)
+    st_ = cache.stats()
+    assert st_["hits"] == 0 and st_["misses"] == 0
+    assert st_["rows"]["feat"] == 0
+    assert store.transport.stats()["saved_remote_bytes"] == 0
+
+
+def test_transport_accounting_saved_bytes_match_hits():
+    store, full = _store()
+    client, cache = _cached_client(store)
+    remote = np.array([20, 21, 45, 46, 21])
+    client.pull("feat", remote)                      # all misses
+    tp0 = store.transport.stats()
+    client.pull("feat", remote)                      # all hits
+    tp1 = store.transport.stats()
+    assert tp1["cache_hits"] - tp0["cache_hits"] == len(remote)
+    assert (tp1["saved_remote_bytes"] - tp0["saved_remote_bytes"]
+            == len(remote) * ROW_BYTES)
+    assert tp1["remote_bytes"] == tp0["remote_bytes"]
+    assert 0 < tp1["remote_traffic_reduction"] <= 1
+
+
+def test_admission_threshold_delays_caching():
+    store, full = _store()
+    client, cache = _cached_client(store, admit_after=2)
+    ids = np.array([20, 45])
+    client.pull("feat", ids)                        # 1st miss: not admitted
+    assert cache.stats()["rows"]["feat"] == 0
+    client.pull("feat", ids)                        # 2nd miss: admitted
+    assert cache.stats()["rows"]["feat"] == 2
+    tp0 = store.transport.stats()["remote_bytes"]
+    client.pull("feat", ids)                        # now hits
+    assert store.transport.stats()["remote_bytes"] == tp0
+
+
+def test_lru_evicts_least_recently_used():
+    store, full = _store()
+    client, cache = _cached_client(store, policy="lru",
+                                   budget_bytes=2 * ROW_BYTES)
+    client.pull("feat", np.array([20, 21]))         # cache: {20, 21}
+    client.pull("feat", np.array([20]))             # touch 20 -> LRU is 21
+    client.pull("feat", np.array([22]))             # evicts 21
+    tp0 = store.transport.stats()["remote_bytes"]
+    client.pull("feat", np.array([20, 22]))         # both still cached
+    assert store.transport.stats()["remote_bytes"] == tp0
+    client.pull("feat", np.array([21]))             # 21 is gone -> refetch
+    assert store.transport.stats()["remote_bytes"] == tp0 + ROW_BYTES
+
+
+def test_clock_gives_second_chance():
+    store, full = _store()
+    client, cache = _cached_client(store, policy="clock",
+                                   budget_bytes=2 * ROW_BYTES)
+    client.pull("feat", np.array([20, 21]))         # both ref'd on insert? no:
+    client.pull("feat", np.array([20]))             # hit sets 20's ref bit
+    client.pull("feat", np.array([22]))             # hand skips 20, evicts 21
+    tp0 = store.transport.stats()["remote_bytes"]
+    client.pull("feat", np.array([20]))             # survived
+    assert store.transport.stats()["remote_bytes"] == tp0
+
+
+# ---------------------------------------------------------------------------
+# pre-warm from the partition book
+# ---------------------------------------------------------------------------
+
+def test_halo_access_counts_brute_force():
+    g = rmat_graph(8, edge_factor=6, seed=2)
+    parts = partition_graph(g, 3, seed=0)
+    book, gps = build_partitions(g, parts)
+    for gp in gps:
+        gids, counts = halo_access_counts(gp)
+        assert len(gids) == gp.n_halo
+        # brute force: count local in-edges per halo vertex
+        want = {}
+        for e, s in enumerate(gp.indices):
+            if s >= gp.n_core:
+                gid = int(gp.local2global[s])
+                want[gid] = want.get(gid, 0) + 1
+        got = dict(zip(gids.tolist(), counts.tolist()))
+        # every halo vertex is referenced by >= 1 local edge
+        assert {g_ for g_, c in got.items() if c > 0} == set(want)
+        for g_, c in want.items():
+            assert got[g_] == c
+        assert (np.diff(counts) <= 0).all()          # hottest first
+        # halo vertices are remote by construction
+        assert (book.nid2part(gids) != gp.part_id).all()
+
+
+def test_prewarm_fills_hottest_rows_and_saves_traffic():
+    g = rmat_graph(8, edge_factor=6, seed=2)
+    parts = partition_graph(g, 3, seed=0)
+    book, gps = build_partitions(g, parts)
+    feats = np.random.default_rng(0).standard_normal(
+        (g.num_nodes, F)).astype(np.float32)
+    store = DistKVStore({"node": PartitionPolicy("node", book.node_offsets)})
+    store.init_data("feat", (F,), np.float32, "node",
+                    full_array=feats[book.new2old_node])
+    cache = FeatureCache(CacheConfig(budget_bytes=8 * ROW_BYTES,
+                                     prewarm_min_count=1), store)
+    cache.register(store, "feat")
+    client = store.client(0).attach_cache(cache)
+    gids, counts = halo_access_counts(gps[0])
+    admitted = cache.warm(client, "feat", gids, counts)
+    assert admitted == min(8, len(gids))
+    # the hottest halo rows now hit without remote traffic
+    tp0 = store.transport.stats()["remote_bytes"]
+    got = client.pull("feat", gids[:admitted])
+    assert np.array_equal(got, feats[book.new2old_node[gids[:admitted]]])
+    assert store.transport.stats()["remote_bytes"] == tp0
+
+
+def test_budget_shared_across_tensors():
+    store, full = _store()
+    full2 = np.arange(N * F, dtype=np.float32).reshape(N, F)
+    store.init_data("feat2", (F,), np.float32, "node", full_array=full2)
+    cache = FeatureCache(CacheConfig(budget_bytes=6 * ROW_BYTES), store)
+    cache.register(store, "feat")
+    cache.register(store, "feat2")
+    client = store.client(0).attach_cache(cache)
+    for _ in range(2):
+        client.pull("feat", np.arange(20, 30))
+        client.pull("feat2", np.arange(30, 40))
+    st_ = cache.stats()
+    assert st_["used_bytes"] <= 6 * ROW_BYTES
+    assert sum(st_["rows"].values()) <= 6
+    # both tensors keep serving exact bytes under contention
+    assert np.array_equal(client.pull("feat", np.arange(20, 30)),
+                          full[20:30])
+    assert np.array_equal(client.pull("feat2", np.arange(30, 40)),
+                          full2[30:40])
+
+
+def test_late_registered_tensor_not_starved():
+    """A tensor registered after the budget filled must still be able to
+    grow: budget pressure evicts from the LARGEST tensor, not always from
+    the inserting one."""
+    store, full = _store()
+    full2 = np.arange(N * F, dtype=np.float32).reshape(N, F)
+    store.init_data("feat2", (F,), np.float32, "node", full_array=full2)
+    cache = FeatureCache(CacheConfig(budget_bytes=8 * ROW_BYTES), store)
+    cache.register(store, "feat")
+    client = store.client(0).attach_cache(cache)
+    client.pull("feat", np.arange(20, 28))          # budget now full
+    assert cache.stats()["rows"]["feat"] == 8
+    cache.register(store, "feat2")
+    for _ in range(2):
+        client.pull("feat2", np.arange(30, 34))
+    st_ = cache.stats()
+    assert st_["rows"]["feat2"] >= 3, st_["rows"]
+    assert st_["used_bytes"] <= 8 * ROW_BYTES
+    tp0 = store.transport.stats()["remote_bytes"]
+    client.pull("feat2", np.arange(30, 34))         # hits now
+    assert store.transport.stats()["remote_bytes"] == tp0
+
+
+def test_prewarm_min_count_filters_unlikely_rows():
+    store, full = _store()
+    cache = FeatureCache(CacheConfig(budget_bytes=1 << 20,
+                                     prewarm_min_count=2), store)
+    cache.register(store, "feat")
+    client = store.client(0).attach_cache(cache)
+    gids = np.array([20, 21, 22, 45])
+    counts = np.array([5, 2, 1, 1])     # count-1 rows: likely never pulled
+    admitted = cache.warm(client, "feat", gids, counts)
+    assert admitted == 2
+    assert cache.stats()["rows"]["feat"] == 2
+
+
+def test_checkpoint_restore_invalidates_cached_mutable_rows():
+    """load_kvstore is a write like any other: caches must refuse their
+    pre-restore copies of mutable rows (DESIGN.md §5)."""
+    import tempfile
+
+    from repro.checkpoint import load_kvstore, save_kvstore
+    from repro.core.kvstore import DistEmbedding
+
+    store = DistKVStore({"node": PartitionPolicy("node", OFFSETS)})
+    emb = DistEmbedding(store, "emb", N, 4, "node", seed=0)
+    cache = FeatureCache(CacheConfig(budget_bytes=1 << 20), store)
+    cache.register(store, "emb")
+    client = store.client(1).attach_cache(cache)
+    ids = np.array([0])                  # remote to machine 1
+    with tempfile.TemporaryDirectory() as tmp:
+        save_kvstore(store, tmp)         # checkpoint at t0
+        emb.push_grad(store.client(0), ids, np.ones((1, 4), np.float32))
+        cached = client.pull("emb", ids)          # caches the post-push row
+        load_kvstore(store, tmp)                  # back to t0 bytes
+        assert cache.stats()["rows"]["emb"] == 0  # restore flushed entries
+        restored = client.pull("emb", ids)
+        assert np.array_equal(restored[0], store.gather_all("emb")[0])
+        assert not np.array_equal(restored, cached)
+
+
+def test_checkpoint_restore_flushes_cached_immutable_rows():
+    """Restores may rewrite even immutable tensors' bytes; caches must
+    not keep serving the pre-restore rows (no version table to refuse
+    them — the restore flushes live caches instead)."""
+    import tempfile
+
+    from repro.checkpoint import load_kvstore, save_kvstore
+
+    store, full = _store()
+    client, cache = _cached_client(store)
+    ids = np.array([20, 45])
+    with tempfile.TemporaryDirectory() as tmp:
+        save_kvstore(store, tmp)
+        before = client.pull("feat", ids)         # cached
+        # out-of-band rewrite (another run's checkpoint would do this)
+        for srv in store.servers:
+            srv.local_view("feat")[...] += 1.0
+        load_kvstore(store, tmp)                  # restores ORIGINAL bytes
+        assert cache.stats()["rows"]["feat"] == 0
+        assert np.array_equal(client.pull("feat", ids), full[ids])
+
+
+def test_write_to_cached_unversioned_tensor_raises():
+    """Any client's write to a tensor some trainer caches without a
+    version table is refused BEFORE mutating server state."""
+    store, full = _store()
+    client, cache = _cached_client(store, machine=0)
+    client.pull("feat", np.array([20]))
+    other = store.client(2)              # no cache attached at all
+    for writer in (client, other):
+        with pytest.raises(ValueError, match="mutable"):
+            writer.push("feat", np.array([20]),
+                        np.ones((1, F), np.float32))
+    assert np.array_equal(store.gather_all("feat"), full)  # untouched
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        CacheConfig(policy="fifo")
+    with pytest.raises(ValueError):
+        CacheConfig(budget_bytes=0)
+    store, _ = _store()
+    cache = FeatureCache(CacheConfig(budget_bytes=4), store)  # < one row
+    with pytest.raises(ValueError):
+        cache.register(store, "feat")

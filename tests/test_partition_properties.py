@@ -1,0 +1,103 @@
+"""Property-based invariant tests for the multilevel partitioner
+(ISSUE 2 hardening pass). Runs under real hypothesis in CI and under the
+deterministic shim in tests/_hypothesis_fallback.py offline.
+
+Invariants:
+  * assignment is total and exclusive — every vertex in exactly one part;
+  * every balance constraint lands within ``(1+eps)`` of its
+    per-partition average, up to a discreteness slack of two maximal
+    vertex weights (one is the ``_balance_caps`` granularity envelope —
+    a single vertex can weigh more than the whole eps margin — and one
+    bounds the best-effort rebalance residual; empirically the residual
+    stays near half that bound);
+  * the reported edge cut equals a brute-force recount straight off the
+    CSR, for both the multilevel and random partitioners.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import build_partitions
+from repro.core.partition.multilevel import (edge_cut, make_constraints,
+                                             partition_graph,
+                                             random_partition)
+from repro.graph import planted_partition_graph, rmat_graph
+from repro.graph.generate import train_val_test_split
+
+
+def _graph(kind: str, seed: int):
+    if kind == "rmat-sparse":
+        return rmat_graph(7, edge_factor=4, seed=seed)
+    if kind == "rmat-dense":
+        return rmat_graph(8, edge_factor=8, seed=seed)
+    return planted_partition_graph(400, 8, seed=seed)
+
+
+GRAPHS = st.sampled_from(["rmat-sparse", "rmat-dense", "planted"])
+
+
+@settings(max_examples=20, deadline=None)
+@given(kind=GRAPHS, k=st.integers(2, 8), seed=st.integers(0, 7))
+def test_every_vertex_exactly_one_part(kind, k, seed):
+    g = _graph(kind, seed)
+    parts = partition_graph(g, k, seed=seed)
+    assert parts.shape == (g.num_nodes,)
+    assert parts.min() >= 0 and parts.max() < k
+    # physical partitions: cores tile the node set exactly once
+    book, gps = build_partitions(g, parts)
+    assert sum(p.n_core for p in gps) == g.num_nodes
+    assert int(book.node_offsets[-1]) == g.num_nodes
+    assert np.array_equal(np.sort(book.new2old_node),
+                          np.arange(g.num_nodes))
+    per_part = np.bincount(parts, minlength=k)
+    assert np.array_equal(per_part, np.diff(book.node_offsets))
+
+
+@settings(max_examples=20, deadline=None)
+@given(kind=GRAPHS, k=st.integers(2, 8), seed=st.integers(0, 7),
+       eps=st.sampled_from([0.05, 0.08, 0.15]),
+       with_split=st.booleans())
+def test_balance_constraints_within_eps(kind, k, seed, eps, with_split):
+    g = _graph(kind, seed)
+    mask = (train_val_test_split(g.num_nodes, train_frac=0.1, seed=seed)
+            if with_split else None)
+    vw = make_constraints(g, mask)
+    parts = partition_graph(g, k, vwgts=vw, seed=seed, eps=eps)
+    loads = np.zeros((k, vw.shape[1]))
+    np.add.at(loads, parts, vw)
+    avg = vw.sum(axis=0) / k
+    vmax = vw.max(axis=0)
+    # (1+eps) of the per-partition average + discreteness slack (2 vmax):
+    # indivisible vertices make the bare (1+eps)·avg bound unattainable
+    bound = (1.0 + eps) * avg + 2.0 * vmax
+    assert (loads <= bound + 1e-9).all(), (
+        f"balance violated: loads=\n{loads}\nbound={bound}")
+
+
+def _brute_force_cut(g, parts) -> float:
+    """Recount crossing edges straight off the CSR, no vectorized tricks."""
+    crossing = 0
+    for dst in range(g.num_nodes):
+        for e in range(int(g.indptr[dst]), int(g.indptr[dst + 1])):
+            if parts[int(g.indices[e])] != parts[dst]:
+                crossing += 1
+    return crossing / max(g.num_edges, 1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(kind=GRAPHS, k=st.integers(2, 6), seed=st.integers(0, 5),
+       method=st.sampled_from(["metis", "random"]))
+def test_edge_cut_matches_brute_force_recount(kind, k, seed, method):
+    g = _graph(kind, seed)
+    parts = (partition_graph(g, k, seed=seed) if method == "metis"
+             else random_partition(g, k, seed=seed))
+    assert edge_cut(g, parts) == pytest.approx(_brute_force_cut(g, parts))
+
+
+def test_single_part_and_tiny_graph_degenerate_cases():
+    g = rmat_graph(5, edge_factor=2, seed=0)
+    assert (partition_graph(g, 1, seed=0) == 0).all()
+    # n <= k: modulo assignment, still total and in range
+    parts = partition_graph(g, g.num_nodes + 3, seed=0)
+    assert parts.shape == (g.num_nodes,)
+    assert parts.min() >= 0
