@@ -43,13 +43,23 @@ def hetero_cfg(ds, batch=16, fanouts=(5, 3), hidden=64):
                      batch_size=batch, num_rels=ds.schema.num_etypes)
 
 
+def lp_cfg(ds, arch="graphsage", batch_edges=16, fanouts=(10, 5), hidden=32):
+    """Link-prediction config: batch_size counts POSITIVE EDGES and the
+    output dim is the embedding dim (num_classes doubles as emb size)."""
+    return GNNConfig(arch=arch, in_dim=ds.feats.shape[1], hidden_dim=hidden,
+                     num_classes=hidden, fanouts=list(fanouts),
+                     batch_size=batch_edges)
+
+
 def make_trainer(ds, cfg, *, machines=2, tpm=2, method="metis",
                  use_level2=True, sync=False, non_stop=True, seed=0,
-                 network=True, cache_mb=0.0, cache_policy="clock"):
+                 network=True, cache_mb=0.0, cache_policy="clock",
+                 task="node_classification", num_negs=4, score_fn="dot"):
     job = TrainJobConfig(
         num_machines=machines, trainers_per_machine=tpm,
         partition_method=method, use_level2=use_level2, sync=sync,
         non_stop=non_stop, seed=seed,
+        task=task, num_negs=num_negs, score_fn=score_fn,
         cache=(CacheConfig.from_mb(cache_mb, policy=cache_policy)
                if cache_mb > 0 else None),
         network=NetworkModel(**NET) if network else None)

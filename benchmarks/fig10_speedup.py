@@ -15,7 +15,8 @@ relative ordering Euler < DistDGL < DistDGLv2 per model.
 """
 from __future__ import annotations
 
-from .common import csv_line, hetero_cfg, make_trainer, small_cfg, time_epochs
+from .common import (csv_line, hetero_cfg, lp_cfg, make_trainer, small_cfg,
+                     time_epochs)
 from repro.graph import get_dataset
 
 MODES = [
@@ -35,23 +36,32 @@ MODES = [
 def run(scale=13, epochs=3):
     rows = []
     # rgcn-hetero: the typed-relation path end-to-end (per-relation
-    # fanouts, per-ntype KVStore policies) on the mag-hetero heterograph
+    # fanouts, per-ntype KVStore policies) on the mag-hetero heterograph;
+    # graphsage-lp: edge-mini-batch link prediction (§6's second task) —
+    # two scales down because LP schedules every owned edge each epoch
     for arch, ds_name, rels in [("graphsage", "product-sim", 1),
                                 ("gat", "product-sim", 1),
                                 ("rgcn", "mag-sim", 4),
-                                ("rgcn-hetero", "mag-hetero", None)]:
-        ds = get_dataset(ds_name, scale=scale)
-        # mag-sim has the paper's papers100M-like 1% train split: use a
-        # batch the per-trainer split can sustain
-        bs = 16 if ds_name.startswith("mag") else 32
-        if arch == "rgcn-hetero":
-            cfg = hetero_cfg(ds, batch=bs)
+                                ("rgcn-hetero", "mag-hetero", None),
+                                ("graphsage-lp", "product-sim", 1)]:
+        task_kw = {}
+        if arch == "graphsage-lp":
+            ds = get_dataset(ds_name, scale=scale - 2)
+            cfg = lp_cfg(ds, batch_edges=64)
+            task_kw = dict(task="link_prediction", num_negs=4)
         else:
-            cfg = small_cfg(arch=arch, in_dim=ds.feats.shape[1],
-                            rels=rels, hidden=64, batch=bs)
+            ds = get_dataset(ds_name, scale=scale)
+            # mag-sim has the paper's papers100M-like 1% train split: use a
+            # batch the per-trainer split can sustain
+            bs = 16 if ds_name.startswith("mag") else 32
+            if arch == "rgcn-hetero":
+                cfg = hetero_cfg(ds, batch=bs)
+            else:
+                cfg = small_cfg(arch=arch, in_dim=ds.feats.shape[1],
+                                rels=rels, hidden=64, batch=bs)
         base = None
         for name, kw in MODES:
-            tr = make_trainer(ds, cfg, **kw)
+            tr = make_trainer(ds, cfg, **kw, **task_kw)
             t = time_epochs(tr, epochs=epochs)
             base = base or t
             rows.append((arch, name, t, base / t))

@@ -3,25 +3,28 @@ partition load/save, training-data load, and train time, plus the
 per-stage busy/starved/backpressured breakdown of the async mini-batch
 pipeline (what the paper's Fig. 7 stages actually cost).
 
-Two workloads:
-  * ``table2/...``        — homogeneous GraphSAGE on product-sim;
-  * ``table2/hetero/...`` — typed-relation RGCN on the mag-hetero
+Three workloads:
+  * ``table2/...``          — homogeneous GraphSAGE on product-sim;
+  * ``table2/hetero/...``   — typed-relation RGCN on the mag-hetero
     heterograph (per-relation fanouts, per-ntype KVStore policies), the
-    paper's OGBN-MAG-class configuration.
+    paper's OGBN-MAG-class configuration;
+  * ``table2/linkpred/...`` — edge-mini-batch link prediction (the paper's
+    second task, §6) through the same async pipeline, with async-vs-sync
+    and cache-on/off ablation columns.
 """
 from __future__ import annotations
 
 import tempfile
 import time
 
-from .common import csv_line, hetero_cfg, make_trainer, small_cfg
+from .common import csv_line, hetero_cfg, lp_cfg, make_trainer, small_cfg
 from repro.checkpoint import save_kvstore, load_kvstore
 from repro.graph import get_dataset
 
 
 def _breakdown(tag: str, ds, cfg, t_load: float, epochs: int,
-               cache_mb: float = 0.0) -> dict:
-    tr = make_trainer(ds, cfg, cache_mb=cache_mb)   # partitions inside
+               cache_mb: float = 0.0, **tr_kw) -> dict:
+    tr = make_trainer(ds, cfg, cache_mb=cache_mb, **tr_kw)   # partitions inside
     t_part = tr.partition_time_s
 
     with tempfile.TemporaryDirectory() as tmp:
@@ -56,13 +59,13 @@ def _breakdown(tag: str, ds, cfg, t_load: float, epochs: int,
 
 
 def _cache_ablation(tag: str, ds, cfg, epochs: int, off: dict,
-                    cache_mb: float = 64.0) -> dict:
+                    cache_mb: float = 64.0, **tr_kw) -> dict:
     """Cache-on vs cache-off column: same workload with a per-trainer
     hot-vertex cache; the paper-style metric is the remote-traffic
     reduction relative to the uncached run (prewarm pulls included in the
     cache-on total, so the saving reported is net)."""
     on = _breakdown(f"{tag}/cache_on", ds, cfg, 0.0, epochs,
-                    cache_mb=cache_mb)
+                    cache_mb=cache_mb, **tr_kw)
     b_off = off["sampling"]["transport"]["remote_bytes"]
     tp_on = on["sampling"]["transport"]
     reduction = 1.0 - tp_on["remote_bytes"] / max(b_off, 1)
@@ -77,6 +80,31 @@ def _cache_ablation(tag: str, ds, cfg, epochs: int, off: dict,
     return dict(remote_bytes_off=b_off,
                 remote_bytes_on=tp_on["remote_bytes"],
                 saved=tp_on["saved_remote_bytes"], reduction=reduction)
+
+
+def _linkpred_rows(scale: int, cache_mb: float) -> dict:
+    """Link-prediction rows (§6's second task): the full breakdown on the
+    async path, an async-vs-sync train column, and the cache-on/off
+    ablation — all through the edge-mini-batch pipeline. Runs one scale
+    down from the node rows: LP schedules EVERY owned edge per epoch."""
+    ds = get_dataset("product-sim", scale=scale)
+    cfg = lp_cfg(ds, batch_edges=64)
+    kw = dict(task="link_prediction", num_negs=4)
+    out = {"async": _breakdown("table2/linkpred", ds, cfg, 0.0, 1, **kw)}
+
+    tr = make_trainer(ds, cfg, sync=True, non_stop=False, **kw)
+    t0 = time.perf_counter()
+    tr.train_epoch(0)
+    t_sync = time.perf_counter() - t0
+    tr.stop()
+    speed = t_sync / max(out["async"]["train"], 1e-9)
+    csv_line("table2/linkpred/train_sync", t_sync * 1e6,
+             f"async_speedup={speed:.2f}x")
+    out["sync_train"] = t_sync
+
+    out["cache"] = _cache_ablation("table2/linkpred", ds, cfg, 1,
+                                   out["async"], cache_mb=cache_mb, **kw)
+    return out
 
 
 def run(scale=12, epochs=2, cache_mb=64.0):
@@ -96,6 +124,8 @@ def run(scale=12, epochs=2, cache_mb=64.0):
     out["hetero_cache"] = _cache_ablation(
         "table2/hetero", ds_h, cfg_h, epochs, out["hetero"],
         cache_mb=cache_mb)
+
+    out["linkpred"] = _linkpred_rows(scale - 1, cache_mb)
     return out
 
 

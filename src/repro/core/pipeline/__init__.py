@@ -1,4 +1,5 @@
 from .async_pipeline import AsyncPipeline, Stage, StageStats
-from .minibatch import MinibatchPipeline
+from .minibatch import EdgeMinibatchPipeline, MinibatchPipeline
 
-__all__ = ["AsyncPipeline", "Stage", "StageStats", "MinibatchPipeline"]
+__all__ = ["AsyncPipeline", "Stage", "StageStats", "MinibatchPipeline",
+           "EdgeMinibatchPipeline"]

@@ -27,8 +27,19 @@ import numpy as np
 
 from ..kvstore.store import KVClient
 from ..sampler.dispatch import DistributedSampler
+from ..sampler.edge_batch import EdgeBatchSampler, EdgeMiniBatch
 from ..sampler.mfg import MiniBatch
 from .async_pipeline import AsyncPipeline, Stage
+
+
+def _device_blocks(mb) -> list:
+    """Ship a mini-batch's padded block arrays to the accelerator (shared
+    by the node and edge device-prefetch stages)."""
+    return [dict(edge_src=jax.device_put(b.edge_src),
+                 edge_dst=jax.device_put(b.edge_dst),
+                 edge_mask=jax.device_put(b.edge_mask),
+                 edge_types=jax.device_put(b.edge_types))
+            for b in mb.blocks]
 
 
 def _epoch_schedule(seeds: np.ndarray, labels: Optional[np.ndarray],
@@ -106,11 +117,7 @@ class MinibatchPipeline:
             seeds=jax.device_put(mb.seeds),
             seed_mask=jax.device_put(mb.seed_mask),
             labels=None if mb.labels is None else jax.device_put(mb.labels),
-            blocks=[dict(edge_src=jax.device_put(b.edge_src),
-                         edge_dst=jax.device_put(b.edge_dst),
-                         edge_mask=jax.device_put(b.edge_mask),
-                         edge_types=jax.device_put(b.edge_types))
-                    for b in mb.blocks],
+            blocks=_device_blocks(mb),
         )
         return mb, dev
 
@@ -158,3 +165,54 @@ class MinibatchPipeline:
 
     def stats_report(self) -> dict:
         return {} if self._pipe is None else self._pipe.stats_report()
+
+
+class EdgeMinibatchPipeline(MinibatchPipeline):
+    """The same 5-stage async pipeline driving *edge* mini-batches
+    (link prediction): edge scheduling -> endpoint ego-network sampling ->
+    CPU feature prefetch (cached KVStore pulls) -> device prefetch ->
+    device-side compaction in the consumer.
+
+    Only stages 1-2 change shape: the schedule permutes the trainer's owned
+    positive edges (per relation on the typed path) instead of its seed
+    nodes, and the sample stage wraps the node sampler through
+    ``EdgeBatchSampler`` — the ``EdgeMiniBatch`` it emits duck-types the
+    ``MiniBatch`` surface, so CPU/device prefetch (and the hot-vertex
+    cache sitting under them) are inherited verbatim.
+    """
+
+    def __init__(self, edge_sampler: EdgeBatchSampler, kv_client: KVClient,
+                 feat_name: str, **kw):
+        self.edge_sampler = edge_sampler
+        super().__init__(edge_sampler.node_sampler, kv_client, feat_name,
+                         seeds=edge_sampler.owned_eids,
+                         batch_size=edge_sampler.batch_edges, **kw)
+        # per-etype pools drop their own tails, so the count is NOT
+        # len(owned)//B on typed runs — ask the edge scheduler
+        self.batches_per_epoch = edge_sampler.batches_per_epoch
+
+    # ---- stages -------------------------------------------------------
+    def _stage_sample(self, item) -> EdgeMiniBatch:
+        epoch, b, etype, eids = item
+        return self.edge_sampler.sample_edges(eids, etype=etype,
+                                              batch_index=b, epoch=epoch)
+
+    def _stage_device_prefetch(self, emb):
+        if not self.to_device:
+            return emb
+        dev = dict(
+            input_feats=jax.device_put(emb.input_feats),
+            seed_mask=jax.device_put(emb.seed_mask),
+            pos_u=jax.device_put(emb.pos_u),
+            pos_v=jax.device_put(emb.pos_v),
+            neg_v=jax.device_put(emb.neg_v),
+            pair_mask=jax.device_put(emb.pair_mask),
+            edge_etypes=jax.device_put(emb.edge_etypes),
+            blocks=_device_blocks(emb),
+        )
+        return emb, dev
+
+    # ---- driving ------------------------------------------------------
+    def _schedule_source(self, epochs):
+        for e in epochs:
+            yield from self.edge_sampler.schedule(self.rng, e)

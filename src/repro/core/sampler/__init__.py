@@ -3,9 +3,12 @@ from .mfg import (MFGBlock, MiniBatch, capacities, pad_block,
 from .neighbor import sample_local
 from .dispatch import DistributedSampler, SamplerStats
 from .compaction import to_block_device, to_block_reference
+from .edge_batch import (EdgeBatchSampler, EdgeMiniBatch, NegativeSampler,
+                         edge_endpoints)
 
 __all__ = [
     "MFGBlock", "MiniBatch", "capacities", "pad_block", "pad_typed_block",
     "relation_capacities", "sample_local", "DistributedSampler",
     "SamplerStats", "to_block_device", "to_block_reference",
+    "EdgeBatchSampler", "EdgeMiniBatch", "NegativeSampler", "edge_endpoints",
 ]

@@ -30,8 +30,12 @@ def run_gnn(args):
     cfg = get_config(args.arch)
     ds = get_dataset(args.dataset, scale=args.scale)
     import dataclasses
+    # link prediction: the model's output is an embedding (dim = hidden),
+    # not class logits, and batch_size counts POSITIVE EDGES per batch
+    out_dim = (cfg.hidden_dim if args.task == "link_prediction"
+               else ds.num_classes)
     cfg = dataclasses.replace(cfg, in_dim=ds.feats.shape[1],
-                              num_classes=ds.num_classes,
+                              num_classes=out_dim,
                               batch_size=min(cfg.batch_size, args.batch_size),
                               num_rels=ds.graph.num_etypes)
     if args.hetero:
@@ -68,17 +72,27 @@ def run_gnn(args):
         trainers_per_machine=args.trainers_per_machine,
         partition_method=args.partition, sync=args.sync,
         non_stop=not args.no_nonstop, cache=cache,
+        task=args.task, num_negs=args.num_negs, score_fn=args.score_fn,
+        neg_mode=args.neg_mode, neg_exclude=args.neg_exclude,
         network=NetworkModel(sleep=args.simulate_network))
     tr = DistGNNTrainer(ds, cfg, job)
-    print(f"[train] {args.arch} on {args.dataset}: "
+    print(f"[train] {args.arch}/{args.task} on {args.dataset}: "
           f"{tr.num_trainers} trainers, {tr.batches_per_epoch} batches/epoch, "
           f"seed locality {tr.locality['mean_local_frac']:.2f}")
+    metric = "mrr" if args.task == "link_prediction" else "acc"
     for e in range(args.epochs):
         m = tr.train_epoch(e)
-        print(f"[epoch {e}] loss={m['loss']:.4f} acc={m['acc']:.3f} "
+        print(f"[epoch {e}] loss={m['loss']:.4f} {metric}={m['acc']:.3f} "
               f"time={m['time_s']:.2f}s")
-    val = tr.evaluate(ds.val_nids)
-    print(f"[final] val_acc={val:.3f} stats={json.dumps(tr.sampling_stats())}")
+    if args.task == "link_prediction":
+        val = tr.evaluate_lp()
+        print(f"[final] val_mrr={val['mrr']:.3f} "
+              f"hits@10={val.get('hits@10', float('nan')):.3f} "
+              f"stats={json.dumps(tr.sampling_stats())}")
+    else:
+        val = tr.evaluate(ds.val_nids)
+        print(f"[final] val_acc={val:.3f} "
+              f"stats={json.dumps(tr.sampling_stats())}")
     tr.stop()
 
 
@@ -111,20 +125,54 @@ def run_lm(args):
     stream.stop()
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--dataset", default="product-sim")
-    ap.add_argument("--scale", type=int, default=12)
-    ap.add_argument("--machines", type=int, default=2)
-    ap.add_argument("--trainers-per-machine", type=int, default=2)
+def build_parser() -> argparse.ArgumentParser:
+    """The launcher CLI. Every flag here must be documented in the
+    top-level README's flag table (tests/test_docs.py enforces it)."""
+    ap = argparse.ArgumentParser(prog="repro.launch.train")
+    ap.add_argument("--arch", required=True,
+                    help="model: graphsage|gat|rgcn or an LM arch id")
+    ap.add_argument("--dataset", default="product-sim",
+                    help="named synthetic dataset (repro.graph.datasets)")
+    ap.add_argument("--scale", type=int, default=12,
+                    help="dataset scale exponent (graph has ~2^scale nodes)")
+    ap.add_argument("--machines", type=int, default=2,
+                    help="simulated machines (level-1 partitions)")
+    ap.add_argument("--trainers-per-machine", type=int, default=2,
+                    help="trainers per machine (level-2 split)")
     ap.add_argument("--partition", default="metis",
-                    choices=["metis", "random"])
-    ap.add_argument("--epochs", type=int, default=3)
-    ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--batch-size", type=int, default=8)
-    ap.add_argument("--seq-len", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=3e-4)
+                    choices=["metis", "random"],
+                    help="graph partitioner (random = Euler baseline)")
+    ap.add_argument("--epochs", type=int, default=3,
+                    help="GNN training epochs")
+    ap.add_argument("--steps", type=int, default=20,
+                    help="LM training steps")
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="GNN: seeds per batch (positive edges for "
+                         "link prediction); LM: sequences per step")
+    ap.add_argument("--seq-len", type=int, default=128,
+                    help="LM sequence length")
+    ap.add_argument("--lr", type=float, default=3e-4,
+                    help="LM learning rate")
+    ap.add_argument("--task", default="node_classification",
+                    choices=["node_classification", "link_prediction"],
+                    help="GNN workload: node classification or edge "
+                         "mini-batch link prediction (§6)")
+    ap.add_argument("--num-negs", type=int, default=16,
+                    help="link prediction: uniform negatives per "
+                         "positive edge (static (B, K) shape; too few "
+                         "can collapse the BCE score head — see "
+                         "DESIGN.md §6)")
+    ap.add_argument("--score-fn", default="dot",
+                    choices=["dot", "distmult"],
+                    help="link-prediction scoring head (distmult learns "
+                         "one diagonal relation embedding per etype)")
+    ap.add_argument("--neg-mode", default="uniform",
+                    choices=["uniform", "in-batch"],
+                    help="negative sampling: fresh uniform nodes (own "
+                         "ego-networks) or in-batch corrupted dsts")
+    ap.add_argument("--neg-exclude", action="store_true",
+                    help="re-draw negatives that collide with a positive "
+                         "pair of the same batch (false-negative filter)")
     ap.add_argument("--hetero", action="store_true",
                     help="typed-relation path: per-relation fanouts, "
                          "per-ntype KVStore policies (schema'd datasets)")
@@ -136,11 +184,19 @@ def main():
     ap.add_argument("--cache-policy", default="clock",
                     choices=["clock", "lru"],
                     help="feature-cache eviction policy")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--sync", action="store_true")
-    ap.add_argument("--no-nonstop", action="store_true")
-    ap.add_argument("--simulate-network", action="store_true")
-    args = ap.parse_args()
+    ap.add_argument("--smoke", action="store_true",
+                    help="LM: reduced same-family config for CPU smoke runs")
+    ap.add_argument("--sync", action="store_true",
+                    help="disable the async pipeline (unpipelined baseline)")
+    ap.add_argument("--no-nonstop", action="store_true",
+                    help="drain the pipeline between epochs (ablation)")
+    ap.add_argument("--simulate-network", action="store_true",
+                    help="enable the network cost model's real sleeps")
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
     from ..configs import GNN_ARCHS
     if args.arch in GNN_ARCHS:
         run_gnn(args)

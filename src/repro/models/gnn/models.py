@@ -162,6 +162,52 @@ def nc_accuracy(logits: jnp.ndarray, labels: jnp.ndarray,
     return ((pred == labels) * m).sum() / jnp.maximum(m.sum(), 1.0)
 
 
+LP_SCORE_FNS = ("dot", "distmult")
+
+
+def init_lp_head(score_fn: str, num_rels: int, emb_dim: int) -> dict:
+    """Scoring-head parameters. ``dot`` is parameter-free; ``distmult``
+    owns one diagonal relation embedding per relation, initialized to ones
+    so training starts exactly at the dot-product score and learns
+    per-relation feature scales from there."""
+    if score_fn == "dot":
+        return {}
+    if score_fn == "distmult":
+        return {"rel_emb": jnp.ones((num_rels, emb_dim), dtype=jnp.float32)}
+    raise ValueError(f"unknown score_fn {score_fn!r}; have {LP_SCORE_FNS}")
+
+
+def lp_pair_scores(h: jnp.ndarray, u_idx: jnp.ndarray, v_idx: jnp.ndarray,
+                   head: Optional[dict] = None, score_fn: str = "dot",
+                   etypes: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Edge scores from node embeddings.
+
+    h: (N, d); u_idx: (B,); v_idx: (B,) -> (B,) scores, or (B, K) ->
+    (B, K) scores (negatives). ``distmult`` scores
+    ``<h_u, diag(r_e), h_v>`` with ``r_e = rel_emb[etypes]`` — per-edge
+    relation lookup, so mixed-relation batches stay static-shape too.
+    """
+    hu = h[u_idx]
+    if score_fn == "distmult":
+        hu = hu * head["rel_emb"][etypes]
+    elif score_fn != "dot":
+        raise ValueError(f"unknown score_fn {score_fn!r}; have {LP_SCORE_FNS}")
+    hv = h[v_idx]
+    if hv.ndim == hu.ndim + 1:
+        return jnp.einsum("pd,pkd->pk", hu, hv)
+    return jnp.einsum("pd,pd->p", hu, hv)
+
+
+def lp_loss_from_scores(pos: jnp.ndarray, neg: jnp.ndarray,
+                        pair_mask: jnp.ndarray) -> jnp.ndarray:
+    """BCE over (B,) positive and (B, K) negative scores, masked to live
+    positive slots."""
+    m = pair_mask.astype(jnp.float32)
+    pos_l = jax.nn.softplus(-pos) * m
+    neg_l = (jax.nn.softplus(neg) * m[:, None]).mean(axis=1)
+    return (pos_l + neg_l).sum() / jnp.maximum(m.sum(), 1.0)
+
+
 def lp_loss(h: jnp.ndarray, pos_u: jnp.ndarray, pos_v: jnp.ndarray,
             neg_v: jnp.ndarray, pair_mask: jnp.ndarray) -> jnp.ndarray:
     """Link-prediction BCE: dot-product scores, uniform negatives.
@@ -169,9 +215,24 @@ def lp_loss(h: jnp.ndarray, pos_u: jnp.ndarray, pos_v: jnp.ndarray,
     h: (N, d) output embeddings; pos_u/pos_v: (P,) indices into h;
     neg_v: (P, K) negatives per positive pair.
     """
-    pos = jnp.einsum("pd,pd->p", h[pos_u], h[pos_v])
-    neg = jnp.einsum("pd,pkd->pk", h[pos_u], h[neg_v])
+    pos = lp_pair_scores(h, pos_u, pos_v)
+    neg = lp_pair_scores(h, pos_u, neg_v)
+    return lp_loss_from_scores(pos, neg, pair_mask)
+
+
+def lp_ranks(pos: jnp.ndarray, neg: jnp.ndarray) -> jnp.ndarray:
+    """Pessimistic rank of each positive among its 1+K candidates: ties
+    count against the positive, so the rank is deterministic and exactly
+    reproducible by the dense NumPy oracle (tested bitwise)."""
+    return (1 + (neg >= pos[:, None]).sum(axis=-1)).astype(jnp.int32)
+
+
+def lp_metrics(ranks: jnp.ndarray, pair_mask: jnp.ndarray,
+               ks: Sequence[int] = (1, 3, 10)) -> dict:
+    """MRR and Hits@k over live positive slots."""
     m = pair_mask.astype(jnp.float32)
-    pos_l = jax.nn.softplus(-pos) * m
-    neg_l = (jax.nn.softplus(neg) * m[:, None]).mean(axis=1)
-    return (pos_l + neg_l).sum() / jnp.maximum(m.sum(), 1.0)
+    n = jnp.maximum(m.sum(), 1.0)
+    out = {"mrr": (m / ranks).sum() / n}
+    for k in ks:
+        out[f"hits@{k}"] = ((ranks <= k) * m).sum() / n
+    return out

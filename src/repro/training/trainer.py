@@ -33,11 +33,16 @@ from ..core.kvstore import (CacheConfig, DistKVStore, FeatureCache,
                             halo_access_counts)
 from ..core.partition import (build_typed_partition, hierarchical_partition,
                               locality_report, split_training_set)
-from ..core.pipeline import MinibatchPipeline
-from ..core.sampler import DistributedSampler
+from ..core.pipeline import EdgeMinibatchPipeline, MinibatchPipeline
+from ..core.sampler import (DistributedSampler, EdgeBatchSampler,
+                            edge_endpoints)
 from ..graph.datasets import GraphDataset
-from ..models.gnn import GNNConfig, apply_gnn, init_gnn, nc_accuracy, nc_loss
+from ..models.gnn import (GNNConfig, apply_gnn, init_gnn, init_lp_head,
+                          lp_loss_from_scores, lp_metrics, lp_pair_scores,
+                          lp_ranks, nc_accuracy, nc_loss)
 from ..optim import adamw_init, adamw_update
+
+TASKS = ("node_classification", "link_prediction")
 
 
 @dataclasses.dataclass
@@ -52,6 +57,21 @@ class TrainJobConfig:
     network: Optional[NetworkModel] = None
     pipeline_depths: Optional[dict] = None
     cache: Optional[CacheConfig] = None  # per-trainer hot-vertex cache
+    # ---- workload (the paper trains "various GNN workloads") ----------
+    # link_prediction: positive-edge batches over each trainer's owned
+    # edges, `num_negs` uniform corrupted dsts per edge, `score_fn` head
+    # (dot | distmult-per-relation), MRR/Hits@k eval. For this task the
+    # model config's batch_size is the EDGE batch B; the node batch the
+    # samplers/model use is derived (2B + B*K, DESIGN.md §6).
+    task: str = "node_classification"
+    # 16, not DGL's customary handful: with few uniform negatives the BCE
+    # objective can settle into the all-scores-zero fixed point (loss
+    # 2·ln2) on homophilous graphs, ranking WORSE than an untrained
+    # encoder; K=16 reliably escapes it (measured in tests/test_linkpred)
+    num_negs: int = 16
+    score_fn: str = "dot"                # "dot" | "distmult"
+    neg_mode: str = "uniform"            # "uniform" | "in-batch"
+    neg_exclude: bool = False            # re-draw batch-positive collisions
     seed: int = 0
 
 
@@ -61,6 +81,19 @@ class DistGNNTrainer:
         self.ds = ds
         self.cfg = model_cfg
         self.job = job
+        if job.task not in TASKS:
+            raise ValueError(f"unknown task {job.task!r}; have {TASKS}")
+        self.task = job.task
+        if self.task == "link_prediction":
+            # cfg.batch_size is the EDGE batch; the node samplers (and the
+            # model's capacity formulas) run at the derived endpoint-seed
+            # capacity — one config object keeps them in lockstep (§2 rule 4)
+            node_bs = EdgeBatchSampler.required_node_batch(
+                model_cfg.batch_size, job.num_negs, job.neg_mode)
+            self.node_cfg = dataclasses.replace(model_cfg,
+                                                batch_size=node_bs)
+        else:
+            self.node_cfg = model_cfg
         t0 = time.perf_counter()
         self.hp = hierarchical_partition(
             ds.graph, job.num_machines, job.trainers_per_machine,
@@ -105,48 +138,99 @@ class DistGNNTrainer:
             self.store.init_data("feat", feats_new.shape[1:], np.float32,
                                  "node", full_array=feats_new)
 
-        # per-trainer seed split (§5.6.1)
-        train_new = book.old2new_node[ds.train_nids]
-        self.trainer_seeds = split_training_set(
-            self.hp, train_new, use_level2=job.use_level2, seed=job.seed)
-        self.locality = locality_report(self.hp, self.trainer_seeds)
+        # per-trainer seed split (§5.6.1): node tasks split the training
+        # vertices; link prediction splits each machine's OWNED edge range
+        # (edges live with their dst vertex) into contiguous per-trainer
+        # pools — "we may use all edges to train a model" (§6)
+        if self.task == "link_prediction":
+            self.e_src, self.e_dst = edge_endpoints(book, ds.graph)
+            self.trainer_edges: List[np.ndarray] = []
+            T = job.trainers_per_machine
+            spans = [(int(book.edge_offsets[m]), int(book.edge_offsets[m + 1]))
+                     for m in range(job.num_machines)]
+            # equal pool size for EVERY trainer (the global equal-count
+            # requirement of §5.6.1: synchronous SGD needs same-size
+            # schedules): each machine range is cut into T contiguous
+            # chunks and each trainer keeps the first min-across-machines
+            # chunk size; the surplus of edge-richer machines is dropped,
+            # like the node split's tail
+            per = min((ehi - elo) // T for elo, ehi in spans)
+            for elo, ehi in spans:
+                chunk = (ehi - elo) // T
+                for t in range(T):
+                    self.trainer_edges.append(np.arange(
+                        elo + t * chunk, elo + t * chunk + per,
+                        dtype=np.int64))
+            # locality of the positive SOURCES (dsts are local by
+            # construction — edges are owned by their dst's machine)
+            self.locality = locality_report(
+                self.hp, [self.e_src[e] for e in self.trainer_edges])
+        else:
+            train_new = book.old2new_node[ds.train_nids]
+            self.trainer_seeds = split_training_set(
+                self.hp, train_new, use_level2=job.use_level2, seed=job.seed)
+            self.locality = locality_report(self.hp, self.trainer_seeds)
 
         # per-trainer samplers + pipelines (+ optional hot-vertex caches)
         self.num_trainers = self.hp.num_trainers
         self.samplers: List[DistributedSampler] = []
+        self.edge_samplers: List[EdgeBatchSampler] = []
         self.pipelines: List[MinibatchPipeline] = []
         self.caches: List[Optional[FeatureCache]] = []
         for ti in range(self.num_trainers):
             machine = ti // job.trainers_per_machine
             s = DistributedSampler(
-                book, self.hp.partitions, model_cfg.fanouts,
-                model_cfg.batch_size, machine=machine,
+                book, self.hp.partitions, self.node_cfg.fanouts,
+                self.node_cfg.batch_size, machine=machine,
                 transport=self.transport, seed=job.seed + 100 + ti,
                 schema=self.schema if self.hetero else None,
                 ntype_of_node=(self.typed.ntype_of_node
                                if self.hetero else None))
             client = self.store.client(machine)
             cache = self._build_cache(client, machine) if job.cache else None
-            seeds = self.trainer_seeds[ti]
-            p = MinibatchPipeline(
-                s, client, "feat", seeds,
-                labels=self.labels_new[seeds], sync=job.sync,
-                non_stop=job.non_stop, depths=job.pipeline_depths,
-                to_device=False, seed=job.seed + 200 + ti,
-                typed=self.typed, cache=cache)
+            if self.task == "link_prediction":
+                es = self._build_edge_sampler(s, self.trainer_edges[ti],
+                                              seed=job.seed + 300 + ti)
+                p = EdgeMinibatchPipeline(
+                    es, client, "feat", sync=job.sync,
+                    non_stop=job.non_stop, depths=job.pipeline_depths,
+                    to_device=False, seed=job.seed + 200 + ti,
+                    typed=self.typed, cache=cache)
+                self.edge_samplers.append(es)
+            else:
+                seeds = self.trainer_seeds[ti]
+                p = MinibatchPipeline(
+                    s, client, "feat", seeds,
+                    labels=self.labels_new[seeds], sync=job.sync,
+                    non_stop=job.non_stop, depths=job.pipeline_depths,
+                    to_device=False, seed=job.seed + 200 + ti,
+                    typed=self.typed, cache=cache)
             self.samplers.append(s)
             self.pipelines.append(p)
             self.caches.append(cache)
         self.batches_per_epoch = min(p.batches_per_epoch for p in self.pipelines)
         if self.batches_per_epoch < 1:
+            if self.task == "link_prediction":
+                raise ValueError(
+                    f"edge batch {model_cfg.batch_size} exceeds the "
+                    f"per-trainer owned-edge pool "
+                    f"({min(len(e) for e in self.trainer_edges)} edges/"
+                    f"trainer) — shrink the batch or the trainer count")
             raise ValueError(
                 f"batch_size {model_cfg.batch_size} exceeds the per-trainer "
                 f"training-set split ({min(len(s) for s in self.trainer_seeds)} "
                 f"seeds/trainer) — shrink the batch or the trainer count")
 
-        self.params = init_gnn(model_cfg, jax.random.key(job.seed))
+        self.params = init_gnn(self.node_cfg, jax.random.key(job.seed))
+        if self.task == "link_prediction":
+            self.params = {"gnn": self.params,
+                           "lp": init_lp_head(job.score_fn,
+                                              self.node_cfg.num_rels,
+                                              self.node_cfg.num_classes)}
         self.opt = adamw_init(self.params)
         self._step = self._build_step()
+        self._eval_ranks_fn = None
+        self._eval_ranks_key = None
 
     # ------------------------------------------------------------------
     def _build_cache(self, client, machine: int) -> FeatureCache:
@@ -176,8 +260,73 @@ class DistGNNTrainer:
         return cache
 
     # ------------------------------------------------------------------
+    def _build_edge_sampler(self, node_sampler: DistributedSampler,
+                            owned_eids: np.ndarray, seed: int, *,
+                            batch_edges: Optional[int] = None,
+                            num_negs: Optional[int] = None,
+                            neg_mode: Optional[str] = None,
+                            exclude: Optional[bool] = None
+                            ) -> EdgeBatchSampler:
+        """One positive-edge scheduler + negative sampler over a pool of
+        owned edges; typed runs draw type-correct negatives from each
+        relation's dst node type. Keyword overrides exist for eval, whose
+        protocol differs from the training job's (single construction
+        site so the pool rules can never diverge)."""
+        job = self.job
+        neg_pools = None
+        etype_of_edge = None
+        schema = None
+        if self.hetero:
+            schema = self.schema
+            etype_of_edge = self.typed.etype_of_edge
+            neg_pools = [self.typed.type2node[schema.dst_ntype_id(r)]
+                         for r in range(schema.num_etypes)]
+        return EdgeBatchSampler(
+            node_sampler, self.e_src, self.e_dst, owned_eids,
+            batch_edges or self.cfg.batch_size,
+            job.num_negs if num_negs is None else num_negs,
+            neg_mode=neg_mode or job.neg_mode,
+            etype_of_edge=etype_of_edge, schema=schema,
+            neg_pools=neg_pools,
+            exclude_batch_positives=(job.neg_exclude if exclude is None
+                                     else exclude),
+            seed=seed)
+
+    # ------------------------------------------------------------------
+    def _lp_scores(self, params, batch, cfg: Optional[GNNConfig] = None):
+        """Embeddings -> (pos, neg) scores; shared by train and eval
+        (eval passes its own cfg — its endpoint capacity differs)."""
+        h = apply_gnn(cfg or self.node_cfg, params["gnn"], batch,
+                      etype_id=self.schema.etype_id if self.hetero else None)
+        kw = dict(head=params["lp"], score_fn=self.job.score_fn,
+                  etypes=batch["edge_etypes"])
+        pos = lp_pair_scores(h, batch["pos_u"], batch["pos_v"], **kw)
+        neg = lp_pair_scores(h, batch["pos_u"], batch["neg_v"], **kw)
+        return pos, neg
+
     def _build_step(self):
-        cfg, lr = self.cfg, self.job.lr
+        lr = self.job.lr
+        if self.task == "link_prediction":
+            @jax.jit
+            def step(params, opt, stacked):
+                def loss_one(p, batch):
+                    pos, neg = self._lp_scores(p, batch)
+                    loss = lp_loss_from_scores(pos, neg, batch["pair_mask"])
+                    mrr = lp_metrics(lp_ranks(pos, neg),
+                                     batch["pair_mask"])["mrr"]
+                    return loss, mrr
+
+                def loss_fn(p):
+                    losses, mrrs = jax.vmap(lambda b: loss_one(p, b))(stacked)
+                    return losses.mean(), mrrs.mean()
+
+                (loss, mrr), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params)
+                params2, opt2 = adamw_update(params, grads, opt, lr=lr)
+                return params2, opt2, loss, mrr
+            return step
+
+        cfg = self.node_cfg
         etype_id = self.schema.etype_id if self.hetero else None
 
         @jax.jit
@@ -203,13 +352,22 @@ class DistGNNTrainer:
         return jax.tree.map(stack_leaf, *batches)
 
     def _device_batch(self, mb) -> dict:
+        blocks = [dict(edge_src=b.edge_src, edge_dst=b.edge_dst,
+                       edge_mask=b.edge_mask, edge_types=b.edge_types)
+                  for b in mb.blocks]
+        if self.task == "link_prediction":
+            return dict(
+                input_feats=mb.input_feats,
+                seed_mask=mb.seed_mask,
+                pos_u=mb.pos_u, pos_v=mb.pos_v, neg_v=mb.neg_v,
+                pair_mask=mb.pair_mask, edge_etypes=mb.edge_etypes,
+                blocks=blocks,
+            )
         return dict(
             input_feats=mb.input_feats,
             labels=mb.labels,
             seed_mask=mb.seed_mask,
-            blocks=[dict(edge_src=b.edge_src, edge_dst=b.edge_dst,
-                         edge_mask=b.edge_mask, edge_types=b.edge_types)
-                    for b in mb.blocks],
+            blocks=blocks,
         )
 
     # ------------------------------------------------------------------
@@ -229,9 +387,82 @@ class DistGNNTrainer:
                 for _ in it:
                     pass
         dt = time.perf_counter() - t0
-        return {"epoch": epoch, "loss": float(np.mean(losses)),
-                "acc": float(np.mean(accs)), "time_s": dt,
-                "batches": self.batches_per_epoch}
+        out = {"epoch": epoch, "loss": float(np.mean(losses)),
+               "acc": float(np.mean(accs)), "time_s": dt,
+               "batches": self.batches_per_epoch}
+        if self.task == "link_prediction":
+            out["train_mrr"] = out["acc"]   # the step's aux metric is MRR
+        return out
+
+    def evaluate_lp(self, num_batches: int = 20, seed: int = 977,
+                    num_negs: Optional[int] = None,
+                    batch_edges: Optional[int] = None) -> dict:
+        """MRR / Hits@k over a deterministic sample of the graph's edges,
+        ALWAYS against fresh uniform negatives (the paper's LP eval
+        protocol: rank the true destination against corrupted ones),
+        regardless of the training ``neg_mode``.
+
+        Eval uses its own candidate count — ``num_negs`` defaults to 49,
+        so ranks span [1, 50] and Hits@10 is a real metric (ranking
+        against only the training K would saturate it) — and therefore
+        its own endpoint capacity / jitted rank program, cached per
+        (B, K). Exclusion is off regardless of ``neg_exclude``: the eval
+        candidates must not depend on ANY training setting. The trainers'
+        samplers are owned by their pipeline threads, so eval builds
+        dedicated ones. As with ``evaluate``, eval feature pulls are
+        charged to the shared transport (sampling RPCs are not) — read
+        ``sampling_stats()`` before evaluating for pure training traffic.
+        """
+        assert self.task == "link_prediction", "trainer is not an LP job"
+        B = batch_edges or min(self.cfg.batch_size, 16)
+        K = num_negs or 49
+        book = self.hp.book
+        node_bs = EdgeBatchSampler.required_node_batch(B, K, "uniform")
+        eval_cfg = dataclasses.replace(self.node_cfg, batch_size=node_bs)
+        node_s = DistributedSampler(
+            book, self.hp.partitions, eval_cfg.fanouts,
+            eval_cfg.batch_size, machine=0, seed=self.job.seed + 998,
+            schema=self.schema if self.hetero else None,
+            ntype_of_node=self.typed.ntype_of_node if self.hetero else None)
+        all_eids = np.arange(int(book.edge_offsets[-1]), dtype=np.int64)
+        es = self._build_edge_sampler(node_s, all_eids,
+                                      seed=self.job.seed + seed,
+                                      batch_edges=B, num_negs=K,
+                                      neg_mode="uniform", exclude=False)
+        client = self.store.client(0)
+        if self._eval_ranks_fn is None or self._eval_ranks_key != (B, K):
+            @jax.jit
+            def eval_ranks(params, batch):
+                pos, neg = self._lp_scores(params, batch, cfg=eval_cfg)
+                return lp_ranks(pos, neg)
+            self._eval_ranks_fn = eval_ranks
+            self._eval_ranks_key = (B, K)
+        rng = np.random.default_rng(self.job.seed + seed)
+        ranks: List[np.ndarray] = []
+        sched = es.schedule(rng, 0)
+        for _ in range(num_batches):
+            try:
+                _e, b, et, eids = next(sched)
+            except StopIteration:
+                break
+            emb = es.sample_edges(eids, etype=et, batch_index=b)
+            if self.hetero:
+                emb.input_feats = client.pull_typed(
+                    "feat", emb.input_gids, self.typed,
+                    ntypes=emb.input_ntypes)
+            else:
+                emb.input_feats = client.pull("feat", emb.input_gids)
+            r = np.asarray(self._eval_ranks_fn(self.params,
+                                               self._device_batch(emb)))
+            ranks.append(r[emb.pair_mask])
+        if not ranks:   # fewer owned edges than one batch: degenerate eval
+            return {"mrr": float("nan"), "num_edges": 0,
+                    **{f"hits@{k}": float("nan") for k in (1, 3, 10)}}
+        r = np.concatenate(ranks).astype(np.float64)
+        out = {"mrr": float((1.0 / r).mean()), "num_edges": int(len(r))}
+        for k in (1, 3, 10):
+            out[f"hits@{k}"] = float((r <= k).mean())
+        return out
 
     def evaluate(self, nids_old: np.ndarray, max_batches: int = 50) -> float:
         book = self.hp.book

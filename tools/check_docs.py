@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Offline documentation checker (stdlib only — the build container has no
+network and no pip; see requirements-dev.txt for what CI installs).
+
+Checks README.md / DESIGN.md / CHANGES.md for:
+
+  1. **markdown links** ``[text](target)`` — relative targets must exist;
+     ``#anchor`` fragments must match a heading slug (GitHub slugify) in
+     the target file; ``http(s)://`` links are skipped (offline);
+  2. **DESIGN section references** — every ``DESIGN.md §X`` mention must
+     have a matching ``## §X`` heading in DESIGN.md. Bare ``§X`` mentions
+     are NOT checked: they are ambiguous with the source paper's section
+     numbers (e.g. "§5.4" in DESIGN.md means the paper's §5.4);
+  3. **backticked file references** — a token like ``core/sampler/mfg.py``
+     must resolve against the repo root or a source root (src, src/repro,
+     the docs refer to modules by their import-ish path).
+
+Exit code 1 with one line per dangling reference; 0 when clean.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DOCS = ["README.md", "DESIGN.md", "CHANGES.md"]
+SEARCH_ROOTS = ["", "src", "src/repro", "tests", "benchmarks"]
+FILE_EXTS = (".py", ".md", ".txt", ".json", ".yml", ".yaml", ".ini", ".toml")
+
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+DESIGN_REF_RE = re.compile(r"DESIGN\.md[^§\n]{0,4}§([0-9A-Za-z][\w.-]*)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$", re.MULTILINE)
+SECTION_RE = re.compile(r"^##\s+§(\S+)", re.MULTILINE)
+# backticked repo paths: at least one '/', a known extension
+CODE_PATH_RE = re.compile(r"`([\w.-]+(?:/[\w.-]+)+\.(?:%s))`"
+                          % "|".join(e.lstrip(".") for e in FILE_EXTS))
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->dashes."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def heading_slugs(text: str) -> set[str]:
+    return {github_slug(m.group(2)) for m in HEADING_RE.finditer(text)}
+
+
+def resolve_path(root: Path, token: str) -> bool:
+    return any((root / sr / token).exists() for sr in SEARCH_ROOTS)
+
+
+def check_file(root: Path, name: str, design_sections: set[str]
+               ) -> list[str]:
+    path = root / name
+    if not path.exists():
+        return [f"{name}: file missing"]
+    text = path.read_text(encoding="utf-8")
+    errors = []
+
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        frag = None
+        if "#" in target:
+            target, frag = target.split("#", 1)
+        if target:
+            tpath = (path.parent / target).resolve()
+            if not tpath.exists():
+                errors.append(f"{name}: dangling link target {target!r}")
+                continue
+        else:
+            tpath = path
+        if frag is not None and tpath.suffix == ".md":
+            if frag not in heading_slugs(tpath.read_text(encoding="utf-8")):
+                errors.append(f"{name}: dangling anchor "
+                              f"{target or name}#{frag}")
+
+    for m in DESIGN_REF_RE.finditer(text):
+        sec = m.group(1).rstrip(".,;:")
+        if sec not in design_sections:
+            errors.append(f"{name}: dangling section reference "
+                          f"DESIGN.md §{sec} (have §{sorted(design_sections)})")
+
+    for m in CODE_PATH_RE.finditer(text):
+        token = m.group(1)
+        if not resolve_path(root, token):
+            errors.append(f"{name}: dangling file reference `{token}`")
+    return errors
+
+
+def check_all(root: Path) -> list[str]:
+    design = root / "DESIGN.md"
+    sections = (set(SECTION_RE.findall(design.read_text(encoding="utf-8")))
+                if design.exists() else set())
+    errors = []
+    for name in DOCS:
+        errors.extend(check_file(root, name, sections))
+    return errors
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    errors = check_all(root)
+    for e in errors:
+        print(f"ERROR: {e}")
+    if errors:
+        print(f"{len(errors)} dangling reference(s)")
+        return 1
+    print(f"docs OK: {', '.join(DOCS)} checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
