@@ -54,12 +54,14 @@ def lp_cfg(ds, arch="graphsage", batch_edges=16, fanouts=(10, 5), hidden=32):
 def make_trainer(ds, cfg, *, machines=2, tpm=2, method="metis",
                  use_level2=True, sync=False, non_stop=True, seed=0,
                  network=True, cache_mb=0.0, cache_policy="clock",
-                 task="node_classification", num_negs=4, score_fn="dot"):
+                 task="node_classification", num_negs=4, score_fn="dot",
+                 sample_workers=1):
     job = TrainJobConfig(
         num_machines=machines, trainers_per_machine=tpm,
         partition_method=method, use_level2=use_level2, sync=sync,
         non_stop=non_stop, seed=seed,
         task=task, num_negs=num_negs, score_fn=score_fn,
+        sample_workers=sample_workers,
         cache=(CacheConfig.from_mb(cache_mb, policy=cache_policy)
                if cache_mb > 0 else None),
         network=NetworkModel(**NET) if network else None)

@@ -5,6 +5,7 @@ random partition + no pipeline (Euler-ish)
   -> +2-level partition (trainer-local seed clustering)
   -> +asynchronous mini-batch pipeline
   -> +non-stop pipeline
+  -> +multi-worker sampling pools (4 sampler threads per trainer)
 
 The paper reports 1.62x for METIS and 4.7x cumulative on OGBN-PRODUCT with
 4 machines / 100 Gbps; absolute ratios here are machine-dependent. Each
@@ -28,6 +29,10 @@ LADDER = [
                     non_stop=False)),
     ("+nonstop", dict(method="metis", use_level2=True, sync=False,
                       non_stop=True)),
+    # PR 4: multi-worker sampling pools (§5.5's "multiple sampling
+    # workers per trainer") on top of the full pipeline ladder
+    ("+sampleworkers", dict(method="metis", use_level2=True, sync=False,
+                            non_stop=True, sample_workers=4)),
 ]
 
 

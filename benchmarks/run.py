@@ -19,7 +19,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 BENCHES = ["fig1", "fig2", "fig10", "fig12", "fig13", "fig14", "table2",
-           "kernels", "roofline"]
+           "sampling", "kernels", "roofline"]
 
 
 def bench_roofline():
@@ -62,6 +62,7 @@ def main() -> None:
                     "fig13": "fig13_convergence",
                     "fig14": "fig14_ablation",
                     "table2": "table2_breakdown",
+                    "sampling": "sampling_micro",
                     "kernels": "kernels_micro",
                 }[name]
                 __import__(f"benchmarks.{mod}", fromlist=["run"]).run()

@@ -1,0 +1,186 @@
+"""Sampling-front microbenchmark (the PR 4 perf acceptance): emits
+``BENCH_sampling.json`` so the perf trajectory accumulates in CI.
+
+Three measurements, all on the table2 configs:
+
+  * **worker scaling** — batches/s of the sampling front (schedule →
+    sample stages, network cost model sleeping like table2) for
+    ``--sample-workers`` in {1, 2, 4}, plus a byte-identity cross-check
+    (the DESIGN.md §7 invariance, measured where it matters);
+  * **vectorized vs loop subsample** — the batched random-key selection
+    against the per-seed ``rng.choice`` loop it replaced;
+  * **typed request coalescing** — remote sampling requests per layer on
+    the mag-hetero typed path (one per owner, carrying every relation)
+    vs the per-relation dispatch it replaced.
+
+Run:  PYTHONPATH=src python -m benchmarks.sampling_micro [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import time
+
+import numpy as np
+
+from .common import NET, csv_line
+from repro.core.kvstore import (DistKVStore, NetworkModel, PartitionPolicy,
+                                Transport)
+from repro.core.partition import (build_typed_partition,
+                                  hierarchical_partition,
+                                  split_training_set)
+from repro.core.pipeline import MinibatchPipeline
+from repro.core.sampler import DistributedSampler
+from repro.core.sampler.neighbor import (_subsample_positions,
+                                         _subsample_positions_loop)
+from repro.graph import get_dataset
+
+
+def _homo_world(scale: int):
+    ds = get_dataset("product-sim", scale=scale)
+    hp = hierarchical_partition(ds.graph, 2, 1, split_mask=ds.split_mask,
+                                seed=0)
+    book = hp.book
+    feats_new = ds.feats[book.new2old_node]
+    store = DistKVStore({"node": PartitionPolicy("node", book.node_offsets)})
+    store.init_data("feat", feats_new.shape[1:], np.float32, "node",
+                    full_array=feats_new)
+    # the whole training set (not one trainer's split): the micro measures
+    # the sampling front, so more batches = a steadier number
+    seeds = book.old2new_node[ds.train_nids]
+    return ds, hp, store, seeds
+
+
+def worker_scaling(scale: int, workers=(1, 2, 4), epochs: int = 2,
+                   batch: int = 32) -> dict:
+    """Batches/s of the sampling front vs pool size, network sleeps on
+    (the table2 regime: RPC latency is what the pool overlaps)."""
+    ds, hp, store, seeds = _homo_world(scale)
+    rows = []
+    hashes = set()
+    for w in workers:
+        tp = Transport(NetworkModel(**NET))
+        sampler = DistributedSampler(hp.book, hp.partitions, [10, 5], batch,
+                                     machine=0, transport=tp, seed=3)
+        pipe = MinibatchPipeline(sampler, store.client(0), "feat", seeds,
+                                 sync=False, non_stop=False,
+                                 to_device=False, seed=4, sample_workers=w)
+        h = hashlib.sha256()
+        n = 0
+        t0 = time.perf_counter()
+        for e in range(epochs):
+            for mb in pipe.epoch(e):
+                n += 1
+                for b in mb.blocks:
+                    h.update(np.ascontiguousarray(b.src_gids).tobytes())
+                    h.update(np.ascontiguousarray(b.edge_src).tobytes())
+        dt = time.perf_counter() - t0
+        pipe.stop()
+        hashes.add(h.hexdigest())
+        bps = n / dt
+        rows.append(dict(workers=w, batches=n, time_s=dt, batches_per_s=bps,
+                         remote_requests=tp.stats()["remote_requests"]))
+        csv_line(f"sampling/workers_{w}", dt * 1e6 / max(n, 1),
+                 f"batches_per_s={bps:.1f}")
+    if len(hashes) != 1:
+        raise AssertionError(
+            f"worker counts produced {len(hashes)} distinct streams — "
+            f"the DESIGN.md §7 invariance is broken")
+    base = rows[0]["batches_per_s"]
+    out = dict(rows=rows, byte_identical=True)
+    for r in rows:
+        r["speedup_vs_w1"] = r["batches_per_s"] / base
+    csv_line("sampling/speedup_w4_vs_w1",
+             rows[-1]["speedup_vs_w1"] * 100.0, "percent")
+    return out
+
+
+def subsample_micro(n_seeds: int = 2000, deg: int = 60, fanout: int = 10,
+                    reps: int = 5) -> dict:
+    """The vectorized random-key subsample vs the per-seed choice loop."""
+    degs = np.full(n_seeds, deg, dtype=np.int64)
+    starts = np.arange(n_seeds, dtype=np.int64) * deg
+
+    def bench(fn):
+        rng = np.random.default_rng(0)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn(starts, degs, fanout, rng)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_vec = bench(_subsample_positions)
+    t_loop = bench(_subsample_positions_loop)
+    csv_line("sampling/subsample_vectorized", t_vec * 1e6,
+             f"seeds={n_seeds};deg={deg};fanout={fanout}")
+    csv_line("sampling/subsample_loop", t_loop * 1e6,
+             f"speedup={t_loop / t_vec:.1f}x")
+    return dict(n_seeds=n_seeds, deg=deg, fanout=fanout,
+                vectorized_s=t_vec, loop_s=t_loop,
+                speedup=t_loop / t_vec)
+
+
+def coalescing(scale: int, batches: int = 5) -> dict:
+    """Remote sampling requests on the typed path: the coalesced dispatch
+    issues one request per owner per layer; ``relation_requests`` counts
+    what the per-relation dispatch it replaced would have issued."""
+    ds = get_dataset("mag-hetero", scale=scale)
+    hp = hierarchical_partition(ds.graph, 2, 1, split_mask=ds.split_mask,
+                                seed=0)
+    book = hp.book
+    typed = build_typed_partition(
+        book, ds.schema, ds.graph.ntypes[book.new2old_node],
+        ds.graph.etypes[book.new2old_edge])
+    fanouts = [{rel: 4 for rel in ds.schema.etypes}] * 2
+    tp = Transport(NetworkModel())
+    s = DistributedSampler(book, hp.partitions, fanouts, 16, machine=0,
+                           transport=tp, seed=5, schema=ds.schema,
+                           ntype_of_node=typed.ntype_of_node)
+    seeds = book.old2new_node[ds.train_nids][:16]
+    for i in range(batches):
+        s.sample(seeds, batch_index=i, epoch=0)
+    st = s.stats
+    out = dict(num_etypes=ds.schema.num_etypes,
+               owner_requests=st.owner_requests,
+               relation_requests=st.relation_requests,
+               coalescing_factor=st.request_coalescing_factor,
+               transport_remote_requests=tp.stats()["remote_requests"])
+    csv_line("sampling/coalescing_factor", st.request_coalescing_factor,
+             f"owner_requests={st.owner_requests};"
+             f"relation_requests={st.relation_requests}")
+    return out
+
+
+def run(scale: int = 12, out_path: str = "BENCH_sampling.json",
+        smoke: bool = False) -> dict:
+    if smoke:
+        scale = min(scale, 9)
+    result = {
+        "config": {"scale": scale, "smoke": smoke, "net": dict(NET)},
+        "worker_scaling": worker_scaling(scale,
+                                         epochs=1 if smoke else 4,
+                                         batch=8 if smoke else 32),
+        "subsample": subsample_micro(
+            n_seeds=300 if smoke else 2000, reps=2 if smoke else 5),
+        "coalescing": coalescing(min(scale, 10)),
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[sampling_micro] wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(prog="benchmarks.sampling_micro")
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--out", default="BENCH_sampling.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small scale for CI: same measurements, tiny run")
+    args = ap.parse_args()
+    run(scale=args.scale, out_path=args.out, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

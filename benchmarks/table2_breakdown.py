@@ -45,11 +45,20 @@ def _breakdown(tag: str, ds, cfg, t_load: float, epochs: int,
     csv_line(f"{tag}/partition", t_part * 1e6)
     csv_line(f"{tag}/save_load_partition", t_ckpt * 1e6)
     csv_line(f"{tag}/train", t_train * 1e6, f"epochs={epochs}")
+    # remote request COUNT (not just bytes): the per-owner coalescing of
+    # the typed dispatch shows up here (coalescing_factor = per-relation
+    # requests each issued request replaced; 1.0 on untyped runs)
+    req = sampling["sampler_requests"]
+    csv_line(f"{tag}/remote_requests",
+             float(sampling["transport"]["remote_requests"]),
+             f"coalescing_factor={req['coalescing_factor']:.1f};"
+             f"owner_requests={req['owner_requests']}")
     for name, st in stage_stats.items():
         csv_line(f"{tag}/stage/{name}",
                  st["busy_s"] * 1e6 / max(st["items"], 1),
                  f"items={st['items']};starved_s={st['wait_in_s']:.3f};"
-                 f"backpressure_s={st['wait_out_s']:.3f}")
+                 f"backpressure_s={st['wait_out_s']:.3f};"
+                 f"workers={st.get('workers', 1)}")
     if "edges_per_etype" in sampling:
         per = sampling["edges_per_etype"]
         csv_line(f"{tag}/edges_per_etype", float(sum(per.values())),
@@ -107,6 +116,20 @@ def _linkpred_rows(scale: int, cache_mb: float) -> dict:
     return out
 
 
+def _worker_scaling_rows(scale: int) -> dict:
+    """Sampling-front batches/s vs --sample-workers on the table2
+    product-sim config (the PR 4 acceptance number); full detail lands in
+    BENCH_sampling.json via benchmarks.sampling_micro."""
+    from .sampling_micro import worker_scaling
+    out = worker_scaling(scale)
+    for r in out["rows"]:
+        csv_line(f"table2/sample_workers/{r['workers']}",
+                 r["time_s"] * 1e6 / max(r["batches"], 1),
+                 f"batches_per_s={r['batches_per_s']:.1f};"
+                 f"speedup_vs_w1={r['speedup_vs_w1']:.2f}x")
+    return out
+
+
 def run(scale=12, epochs=2, cache_mb=64.0):
     t0 = time.perf_counter()
     ds = get_dataset("product-sim", scale=scale)
@@ -115,6 +138,7 @@ def run(scale=12, epochs=2, cache_mb=64.0):
     out = {"homogeneous": _breakdown("table2", ds, cfg, t_load, epochs)}
     out["homogeneous_cache"] = _cache_ablation(
         "table2", ds, cfg, epochs, out["homogeneous"], cache_mb=cache_mb)
+    out["sample_workers"] = _worker_scaling_rows(scale)
 
     t0 = time.perf_counter()
     ds_h = get_dataset("mag-hetero", scale=scale)

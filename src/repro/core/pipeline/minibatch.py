@@ -3,8 +3,10 @@
 
   1. **batch scheduling** — permute the trainer's seed set each epoch, cut
      into fixed-size batches (runs in the feeder thread);
-  2. **neighbor sampling** — multi-hop owner-compute sampling (sampling
-     thread; deep queue);
+  2. **neighbor sampling** — multi-hop owner-compute sampling
+     (``sample_workers`` pool threads sharing the stage queue — the
+     paper's multiple sampling workers per trainer; batches come out in
+     order and byte-identical for any pool size, DESIGN.md §7);
   3. **CPU prefetch** — pull input-node features (local shared-memory +
      remote KVStore) into one contiguous buffer (sampling thread);
   4. **device prefetch** — ship the padded arrays to the accelerator
@@ -29,6 +31,7 @@ from ..kvstore.store import KVClient
 from ..sampler.dispatch import DistributedSampler
 from ..sampler.edge_batch import EdgeBatchSampler, EdgeMiniBatch
 from ..sampler.mfg import MiniBatch
+from ..sampler.prng import STREAM_SCHEDULE, batch_rng
 from .async_pipeline import AsyncPipeline, Stage
 
 
@@ -61,7 +64,7 @@ class MinibatchPipeline:
                  depths: dict | None = None,
                  sync: bool = False, non_stop: bool = True,
                  to_device: bool = True, seed: int = 0, typed=None,
-                 cache=None):
+                 cache=None, sample_workers: int = 1):
         self.sampler = sampler
         self.kv_client = kv_client
         self.feat_name = feat_name
@@ -84,10 +87,17 @@ class MinibatchPipeline:
         self.sync = sync
         self.non_stop = non_stop
         self.to_device = to_device
-        self.rng = np.random.default_rng(seed)
+        # counter-based schedule randomness (DESIGN.md §7): each epoch's
+        # permutation derives from (seed, epoch) so schedules are replayable
+        # and independent of how many epochs ran before
+        self.seed = seed
+        # sampling-stage worker pool size (§5.5's "multiple sampling
+        # workers per trainer"); batches are byte-identical for any value
+        self.sample_workers = max(int(sample_workers), 1)
         self.batches_per_epoch = len(self.seeds) // self.batch_size
         self._pipe: Optional[AsyncPipeline] = None
         self._out_iter = None
+        self._nonstop_epoch: Optional[int] = None
         self._lock = threading.Lock()
 
     # ---- stages -------------------------------------------------------
@@ -122,14 +132,18 @@ class MinibatchPipeline:
         return mb, dev
 
     # ---- driving ------------------------------------------------------
+    def _epoch_rng(self, epoch: int) -> np.random.Generator:
+        return batch_rng(self.seed, epoch, 0, STREAM_SCHEDULE)
+
     def _schedule_source(self, epochs: Iterator[int]):
         for e in epochs:
             yield from _epoch_schedule(self.seeds, self.labels,
-                                       self.batch_size, self.rng, e)
+                                       self.batch_size, self._epoch_rng(e), e)
 
     def _build(self, epochs) -> AsyncPipeline:
         stages = [
-            Stage("sample", self._stage_sample, depth=self.depths["sample"]),
+            Stage("sample", self._stage_sample, depth=self.depths["sample"],
+                  workers=self.sample_workers),
             Stage("cpu_prefetch", self._stage_cpu_prefetch,
                   depth=self.depths["cpu_prefetch"]),
             Stage("device_prefetch", self._stage_device_prefetch,
@@ -139,10 +153,21 @@ class MinibatchPipeline:
                              sync=self.sync, name="minibatch")
 
     def epoch(self, epoch: int):
-        """Iterate one epoch's device-ready mini-batches."""
+        """Iterate one epoch's device-ready mini-batches.
+
+        Non-stop mode keeps ONE pipeline alive across epochs: the internal
+        epoch stream starts at the first requested epoch and advances by
+        one per completed epoch, so callers MUST ask for consecutive
+        epochs (e, e+1, e+2, ...) — the batches already in flight were
+        scheduled under that assumption. A non-consecutive request raises
+        instead of silently serving batches labeled (and permuted) for a
+        different epoch. Abandoning an epoch iterator mid-epoch leaves the
+        remaining batches in flight and is likewise unsupported."""
         if self.non_stop and not self.sync:
             with self._lock:
                 if self._pipe is None:
+                    self._nonstop_epoch = epoch
+
                     # infinite epoch stream; the pipeline never drains
                     def forever():
                         e = epoch
@@ -151,6 +176,12 @@ class MinibatchPipeline:
                             e += 1
                     self._pipe = self._build(forever())
                     self._out_iter = iter(self._pipe)
+                elif epoch != self._nonstop_epoch:
+                    raise ValueError(
+                        f"non-stop pipeline serves consecutive epochs: "
+                        f"expected epoch {self._nonstop_epoch}, got {epoch} "
+                        f"(stop() the pipeline to rewind or skip)")
+                self._nonstop_epoch = epoch + 1
             for _ in range(self.batches_per_epoch):
                 yield next(self._out_iter)
         else:
@@ -162,6 +193,8 @@ class MinibatchPipeline:
         if self._pipe is not None:
             self._pipe.stop()
             self._pipe = None
+            self._out_iter = None
+            self._nonstop_epoch = None
 
     def stats_report(self) -> dict:
         return {} if self._pipe is None else self._pipe.stats_report()
@@ -215,4 +248,4 @@ class EdgeMinibatchPipeline(MinibatchPipeline):
     # ---- driving ------------------------------------------------------
     def _schedule_source(self, epochs):
         for e in epochs:
-            yield from self.edge_sampler.schedule(self.rng, e)
+            yield from self.edge_sampler.schedule(self._epoch_rng(e), e)

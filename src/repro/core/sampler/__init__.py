@@ -5,10 +5,12 @@ from .dispatch import DistributedSampler, SamplerStats
 from .compaction import to_block_device, to_block_reference
 from .edge_batch import (EdgeBatchSampler, EdgeMiniBatch, NegativeSampler,
                          edge_endpoints)
+from .prng import batch_rng, batch_seed_sequence
 
 __all__ = [
     "MFGBlock", "MiniBatch", "capacities", "pad_block", "pad_typed_block",
     "relation_capacities", "sample_local", "DistributedSampler",
     "SamplerStats", "to_block_device", "to_block_reference",
     "EdgeBatchSampler", "EdgeMiniBatch", "NegativeSampler", "edge_endpoints",
+    "batch_rng", "batch_seed_sequence",
 ]

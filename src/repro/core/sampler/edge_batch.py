@@ -41,6 +41,7 @@ from ...graph.hetero import HeteroSchema
 from ..partition.book import PartitionBook
 from .dispatch import DistributedSampler
 from .mfg import MiniBatch
+from .prng import STREAM_NEG, STREAM_NEG_ADHOC, PerBatchRng
 
 
 def edge_endpoints(book: PartitionBook, g: CSRGraph
@@ -136,6 +137,11 @@ class NegativeSampler:
     the batch are allowed, as in DGL's uniform sampler), falling back to a
     deterministic linear probe so the guarantee is absolute, not
     probabilistic.
+
+    Randomness is counter-based (DESIGN.md §7): each ``sample`` call draws
+    from a private generator derived from ``(seed, epoch, batch_index)``,
+    so negatives are reproducible per batch coordinate regardless of
+    which sampling worker builds the batch or in what order.
     """
 
     def __init__(self, num_nodes: int, num_negs: int, *,
@@ -151,7 +157,12 @@ class NegativeSampler:
         self.pools = pools
         self.exclude = exclude_batch_positives
         self.max_resample = max_resample
-        self.rng = np.random.default_rng(seed)
+        self.seed = int(seed)
+        # the per-batch generator policy (DESIGN.md §7), shared with the
+        # node sampler via prng.PerBatchRng — scheduled draws key on
+        # (epoch, batch_index), unscheduled ones on a sequential counter
+        self._batch_rng = PerBatchRng(self.seed, STREAM_NEG,
+                                      STREAM_NEG_ADHOC)
 
     # ------------------------------------------------------------------
     def _pool(self, etype: int) -> Optional[np.ndarray]:
@@ -177,7 +188,8 @@ class NegativeSampler:
                       + candidates[None, :], pos_keys)
         return mat.all(axis=1)
 
-    def sample(self, pos_src: np.ndarray, pos_dst: np.ndarray, etype: int
+    def sample(self, pos_src: np.ndarray, pos_dst: np.ndarray, etype: int,
+               epoch: int = -1, batch_index: int = -1
                ) -> tuple[np.ndarray, Optional[np.ndarray]]:
         """Draw negatives for one batch of positive pairs.
 
@@ -186,7 +198,7 @@ class NegativeSampler:
         produced them (None for uniform mode).
         """
         B, K = len(pos_src), self.num_negs
-        rng = self.rng
+        rng = self._batch_rng(epoch, batch_index)
         pos_keys = (pos_src.astype(np.int64) * self.num_nodes + pos_dst)
         if self.mode == "in-batch":
             idx = rng.integers(0, B, size=(B, K))
@@ -340,7 +352,8 @@ class EdgeBatchSampler:
         else:
             edge_etypes = np.zeros(B, dtype=np.int32)
 
-        neg_dst, in_batch_idx = self.negatives.sample(u, v, etype)
+        neg_dst, in_batch_idx = self.negatives.sample(
+            u, v, etype, epoch=epoch, batch_index=batch_index)
         pos_u = np.arange(B, dtype=np.int32)
         pos_v = B + np.arange(B, dtype=np.int32)
         if self.neg_mode == "in-batch":

@@ -74,6 +74,7 @@ def run_gnn(args):
         non_stop=not args.no_nonstop, cache=cache,
         task=args.task, num_negs=args.num_negs, score_fn=args.score_fn,
         neg_mode=args.neg_mode, neg_exclude=args.neg_exclude,
+        sample_workers=args.sample_workers,
         network=NetworkModel(sleep=args.simulate_network))
     tr = DistGNNTrainer(ds, cfg, job)
     print(f"[train] {args.arch}/{args.task} on {args.dataset}: "
@@ -184,6 +185,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--cache-policy", default="clock",
                     choices=["clock", "lru"],
                     help="feature-cache eviction policy")
+    ap.add_argument("--sample-workers", type=int, default=1,
+                    help="sampling-stage worker threads per trainer "
+                         "(batches are byte-identical for any value; "
+                         "see DESIGN.md §7)")
     ap.add_argument("--smoke", action="store_true",
                     help="LM: reduced same-family config for CPU smoke runs")
     ap.add_argument("--sync", action="store_true",

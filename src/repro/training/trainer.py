@@ -57,6 +57,9 @@ class TrainJobConfig:
     network: Optional[NetworkModel] = None
     pipeline_depths: Optional[dict] = None
     cache: Optional[CacheConfig] = None  # per-trainer hot-vertex cache
+    # sampling-stage worker pool per trainer (§5.5's multiple sampling
+    # workers); batches are byte-identical for any value (DESIGN.md §7)
+    sample_workers: int = 1
     # ---- workload (the paper trains "various GNN workloads") ----------
     # link_prediction: positive-edge batches over each trainer's owned
     # edges, `num_negs` uniform corrupted dsts per edge, `score_fn` head
@@ -195,7 +198,8 @@ class DistGNNTrainer:
                     es, client, "feat", sync=job.sync,
                     non_stop=job.non_stop, depths=job.pipeline_depths,
                     to_device=False, seed=job.seed + 200 + ti,
-                    typed=self.typed, cache=cache)
+                    typed=self.typed, cache=cache,
+                    sample_workers=job.sample_workers)
                 self.edge_samplers.append(es)
             else:
                 seeds = self.trainer_seeds[ti]
@@ -204,7 +208,8 @@ class DistGNNTrainer:
                     labels=self.labels_new[seeds], sync=job.sync,
                     non_stop=job.non_stop, depths=job.pipeline_depths,
                     to_device=False, seed=job.seed + 200 + ti,
-                    typed=self.typed, cache=cache)
+                    typed=self.typed, cache=cache,
+                    sample_workers=job.sample_workers)
             self.samplers.append(s)
             self.pipelines.append(p)
             self.caches.append(cache)
@@ -480,7 +485,8 @@ class DistGNNTrainer:
         bs = self.cfg.batch_size
         for b in range(min(max_batches, len(nids) // bs)):
             chunk = nids[b * bs:(b + 1) * bs]
-            mb = sampler.sample(chunk, labels=self.labels_new[chunk])
+            mb = sampler.sample(chunk, labels=self.labels_new[chunk],
+                                batch_index=b)
             if self.hetero:
                 mb.input_feats = client.pull_typed("feat", mb.input_gids,
                                                    self.typed,
@@ -501,8 +507,18 @@ class DistGNNTrainer:
     def sampling_stats(self) -> dict:
         remote = sum(s.stats.seeds_remote for s in self.samplers)
         total = sum(s.stats.seeds_total for s in self.samplers)
+        owner_req = sum(s.stats.owner_requests for s in self.samplers)
+        rel_req = sum(s.stats.relation_requests for s in self.samplers)
         out = {"remote_seed_frac": remote / max(total, 1),
                "transport": self.transport.stats(),
+               # request-count accounting (§5.5 batched RPCs): requests the
+               # coalesced dispatch actually issued vs what a per-relation
+               # dispatch would have issued (equal on untyped runs)
+               "sampler_requests": {
+                   "owner_requests": owner_req,
+                   "relation_requests": rel_req,
+                   "coalescing_factor": rel_req / max(owner_req, 1),
+               },
                "mean_seed_locality": self.locality["mean_local_frac"],
                "partition_time_s": self.partition_time_s}
         live = [c for c in self.caches if c is not None]

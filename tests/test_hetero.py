@@ -18,11 +18,14 @@ from repro.graph import (HeteroCSRGraph, HeteroSchema, fused_from_typed,
 # fanouts [10, 5], batch 64, sampler seed 7). Captured from the pre-hetero
 # seed code at PR 1; re-captured at PR 2 ONLY because the partitioner's
 # balance hardening (multilevel._rebalance) legitimately moves vertices,
-# which changes the ID relabeling feeding the sampler — the sampler's own
-# byte layout is unchanged (the cache-on/off and degenerate-schema
-# identities below still pin it). Any future drift is a regression.
-GOLDEN_HOMOGENEOUS = ("554ad3fbe58e4f165c96c607579ec0c4"
-                     "de974d79c914a15fd5afd279f3aa5727")
+# which changes the ID relabeling feeding the sampler; re-captured ONCE
+# more at PR 4 for the counter-based RNG refactor (DESIGN.md §7: draws now
+# derive from (seed, epoch, batch) instead of one shared generator, and
+# the subsample is a vectorized random-key draw). PR 4's worker-count /
+# sync / replay invariance tests (test_sample_workers.py) pin the stream
+# from here on — any future drift is a regression.
+GOLDEN_HOMOGENEOUS = ("d37711b763072ef6c29d95c4a3383779"
+                     "d22d1d6f56ce6389a9a7268118daa6f8")
 
 FANOUTS = {"cites": 5, "writes": 3, "rev_writes": 2, "employs": 2}
 

@@ -99,6 +99,122 @@ def test_stage_stats_recorded():
     assert p.stats_report()["w"]["items"] == 10
 
 
+def test_pool_preserves_order_under_out_of_order_completion():
+    # Worker pool stress: per-item delays force completions far out of
+    # order (item 0 is the slowest of each wave); the reassembly buffer
+    # must still emit strictly in sequence.
+    def jitter(x):
+        time.sleep(0.012 - 0.003 * (x % 4))
+        return x * 10
+    stages = [Stage("pool", jitter, depth=2, workers=4),
+              Stage("tail", lambda x: x + 1, depth=2)]
+    p = AsyncPipeline(range(40), stages)
+    assert list(p) == [x * 10 + 1 for x in range(40)]
+    rep = p.stats_report()
+    assert rep["pool"]["items"] == 40 and rep["pool"]["workers"] == 4
+    assert rep["tail"]["items"] == 40 and rep["tail"]["workers"] == 1
+
+
+@pytest.mark.slow
+def test_pool_overlaps_item_latency():
+    # 4 workers on a 10ms stage must beat the serial 0.3s floor clearly.
+    # Wall-clock on a busy 1-core host is noisy: best of 2 runs, like
+    # test_minibatch_pipeline_async_faster_than_sync.
+    def slow(x):
+        time.sleep(0.01)
+        return x
+
+    def run():
+        t0 = time.perf_counter()
+        out = list(AsyncPipeline(range(30),
+                                 [Stage("s", slow, depth=4, workers=4)]))
+        assert out == list(range(30))
+        return time.perf_counter() - t0
+
+    dt = min(run() for _ in range(2))
+    assert dt < 0.25, dt   # serial would be >= 0.3s
+
+
+def test_pool_reorder_buffer_bounded():
+    # One very slow batch must not let the siblings race ahead without
+    # bound (the ordering window): while item 0 blocks, at most
+    # workers+depth items may complete, no matter how deep the source is.
+    import threading
+    release = threading.Event()
+
+    def fn(x):
+        if x == 0:
+            release.wait(timeout=10)
+        return x
+
+    p = AsyncPipeline(range(5000), [Stage("s", fn, depth=2, workers=4)])
+    p.start()
+    time.sleep(0.5)                  # pool runs while item 0 is stuck
+    done_ahead = p.stats["s"].items
+    release.set()
+    assert list(p) == list(range(5000))
+    assert done_ahead <= 4 + 2, done_ahead   # the workers+depth window
+    p.stop()
+
+
+def test_pool_error_stops_sibling_workers():
+    # After one worker errors, siblings must stop invoking fn (their side
+    # effects would pollute transport accounting) instead of burning
+    # through the rest of an unbounded schedule.
+    import threading
+    calls = [0]
+    lock = threading.Lock()
+
+    def boom(x):
+        with lock:
+            calls[0] += 1
+        if x == 5:
+            raise ValueError("boom")
+        time.sleep(0.002)
+        return x
+
+    p = AsyncPipeline(range(100000), [Stage("b", boom, depth=2, workers=4)])
+    with pytest.raises(ValueError):
+        list(p)
+    time.sleep(0.3)                  # grace for siblings to notice
+    with lock:
+        seen = calls[0]
+    time.sleep(0.3)
+    with lock:
+        assert calls[0] <= seen + 4, "workers kept running fn after error"
+    p.stop()
+
+
+def test_pool_error_propagates():
+    def boom(x):
+        if x == 7:
+            raise ValueError("boom")
+        time.sleep(0.002)
+        return x
+    p = AsyncPipeline(range(50), [Stage("b", boom, depth=2, workers=4)])
+    with pytest.raises(ValueError):
+        list(p)
+    p.stop()
+
+
+def test_pool_stop_joins_threads():
+    stages = [Stage("a", lambda x: x, depth=1, workers=3),
+              Stage("b", lambda x: x, depth=1)]
+    p = AsyncPipeline(range(100000), stages)
+    it = iter(p)
+    next(it)
+    time.sleep(0.1)             # queues fill; workers block on put()
+    threads = list(p._threads)
+    p.stop(timeout=5.0)
+    assert all(not t.is_alive() for t in threads)
+
+
+def test_pool_sync_mode_ignores_workers():
+    stages = [Stage("sq", lambda x: x * x, depth=2, workers=8)]
+    assert (list(AsyncPipeline(range(20), stages, sync=True))
+            == [x * x for x in range(20)])
+
+
 @pytest.fixture(scope="module")
 def world():
     ds = get_dataset("product-sim", scale=11)

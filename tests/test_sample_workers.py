@@ -1,0 +1,298 @@
+"""PR 4 guarantees: sampler worker pools scale the pipeline front WITHOUT
+changing a single byte of the training stream.
+
+  * worker-count invariance — node and edge mini-batches (features
+    included) are byte-identical for ``sample_workers`` in {1, 2, 4} and
+    for the unpipelined ``sync=True`` baseline, on the homogeneous and the
+    typed path, and on replay (fresh identically-seeded run);
+  * the pooled stage reassembles out-of-order completions in order and
+    keeps sane stats (tests in test_pipeline.py stress the raw pool);
+  * typed dispatch coalesces sampling RPCs to one request per owner per
+    layer (``remote_requests`` drops by the active-relation count);
+  * the vectorized without-replacement subsample draws valid, unique,
+    uniform positions;
+  * the non-stop pipeline's consecutive-epoch contract is enforced.
+"""
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core.kvstore import (DistKVStore, NetworkModel, PartitionPolicy,
+                                Transport)
+from repro.core.partition import build_typed_partition, hierarchical_partition
+from repro.core.pipeline import EdgeMinibatchPipeline, MinibatchPipeline
+from repro.core.sampler import (DistributedSampler, EdgeBatchSampler,
+                                edge_endpoints)
+from repro.core.sampler.neighbor import (_subsample_positions,
+                                         _subsample_positions_loop)
+from repro.graph import get_dataset
+
+WORKER_COUNTS = (1, 2, 4)
+FANOUTS_TYPED = {"cites": 5, "writes": 3, "rev_writes": 2, "employs": 2}
+
+
+@pytest.fixture(scope="module")
+def homo_world():
+    ds = get_dataset("product-sim", scale=10)
+    hp = hierarchical_partition(ds.graph, 2, 1, split_mask=ds.split_mask,
+                                seed=0)
+    book = hp.book
+    feats_new = ds.feats[book.new2old_node]
+    store = DistKVStore({"node": PartitionPolicy("node", book.node_offsets)})
+    store.init_data("feat", feats_new.shape[1:], np.float32, "node",
+                    full_array=feats_new)
+    return ds, hp, store
+
+
+@pytest.fixture(scope="module")
+def hetero_world():
+    ds = get_dataset("mag-hetero", scale=10)
+    hp = hierarchical_partition(ds.graph, 2, 1, split_mask=ds.split_mask,
+                                seed=0)
+    book = hp.book
+    typed = build_typed_partition(
+        book, ds.schema, ds.graph.ntypes[book.new2old_node],
+        ds.graph.etypes[book.new2old_edge])
+    store = DistKVStore({"node": PartitionPolicy("node", book.node_offsets),
+                         **typed.policies()})
+    for t, nt in enumerate(typed.schema.ntypes):
+        rows = ds.feats[book.new2old_node[typed.type2node[t]]]
+        store.init_data(f"feat:{nt}", rows.shape[1:], np.float32,
+                        f"node:{nt}", full_array=rows)
+    return ds, hp, typed, store
+
+
+def _hash_node_stream(pipe, epochs=2):
+    h = hashlib.sha256()
+    n = 0
+    for e in range(epochs):
+        for mb in pipe.epoch(e):
+            for b in mb.blocks:
+                for arr in (b.src_gids, b.edge_src, b.edge_dst, b.edge_mask,
+                            b.edge_types):
+                    h.update(np.ascontiguousarray(arr).tobytes())
+            h.update(mb.seeds.tobytes())
+            h.update(mb.seed_mask.tobytes())
+            h.update(np.int64([mb.epoch, mb.batch_index]).tobytes())
+            h.update(np.ascontiguousarray(mb.input_feats).tobytes())
+            n += 1
+    pipe.stop()
+    return h.hexdigest(), n
+
+
+def _hash_edge_stream(pipe, epochs=2):
+    h = hashlib.sha256()
+    n = 0
+    for e in range(epochs):
+        for emb in pipe.epoch(e):
+            for b in emb.blocks:
+                for arr in (b.src_gids, b.edge_src, b.edge_dst, b.edge_mask,
+                            b.edge_types):
+                    h.update(np.ascontiguousarray(arr).tobytes())
+            for arr in (emb.mb.seeds, emb.pos_eids, emb.pos_src, emb.pos_dst,
+                        emb.neg_dst, emb.neg_v, emb.edge_etypes,
+                        emb.pair_mask):
+                h.update(np.ascontiguousarray(arr).tobytes())
+            h.update(np.ascontiguousarray(emb.input_feats).tobytes())
+            n += 1
+    pipe.stop()
+    return h.hexdigest(), n
+
+
+# ---------------------------------------------------------------------------
+# worker-count / sync / replay invariance
+# ---------------------------------------------------------------------------
+
+def test_node_batches_invariant_across_worker_counts(homo_world):
+    ds, hp, store = homo_world
+    book = hp.book
+    seeds = book.old2new_node[ds.train_nids][:256]
+    labels_new = ds.labels[book.new2old_node]
+
+    def run(workers, sync):
+        s = DistributedSampler(book, hp.partitions, [10, 5], 32, machine=0,
+                               seed=5)
+        pipe = MinibatchPipeline(s, store.client(0), "feat", seeds,
+                                 labels=labels_new[seeds], sync=sync,
+                                 non_stop=False, to_device=False, seed=6,
+                                 sample_workers=workers)
+        return _hash_node_stream(pipe)
+
+    h_sync, n_sync = run(1, sync=True)
+    assert n_sync == 2 * (len(seeds) // 32) > 0
+    for w in WORKER_COUNTS:
+        h_w, n_w = run(w, sync=False)
+        assert n_w == n_sync
+        assert h_w == h_sync, f"sample_workers={w} changed the node stream"
+    # replay: an identically-seeded fresh run reproduces the bytes
+    assert run(4, sync=False)[0] == h_sync
+
+
+def test_typed_batches_invariant_across_worker_counts(hetero_world):
+    ds, hp, typed, store = hetero_world
+    book = hp.book
+    seeds = book.old2new_node[ds.train_nids][:96]
+    labels_new = ds.labels[book.new2old_node]
+
+    def run(workers, sync):
+        s = DistributedSampler(book, hp.partitions,
+                               [dict(FANOUTS_TYPED)] * 2, 16, machine=0,
+                               seed=15, schema=ds.schema,
+                               ntype_of_node=typed.ntype_of_node)
+        pipe = MinibatchPipeline(s, store.client(0), "feat", seeds,
+                                 labels=labels_new[seeds], sync=sync,
+                                 non_stop=False, to_device=False, seed=16,
+                                 typed=typed, sample_workers=workers)
+        return _hash_node_stream(pipe)
+
+    h_sync, n_sync = run(1, sync=True)
+    assert n_sync > 0
+    for w in WORKER_COUNTS:
+        h_w, n_w = run(w, sync=False)
+        assert n_w == n_sync
+        assert h_w == h_sync, f"sample_workers={w} changed the typed stream"
+
+
+def test_edge_batches_invariant_across_worker_counts(homo_world):
+    ds, hp, store = homo_world
+    book = hp.book
+    e_src, e_dst = edge_endpoints(book, ds.graph)
+    owned = np.arange(int(book.edge_offsets[0]), int(book.edge_offsets[1]),
+                      dtype=np.int64)[:512]
+
+    def run(workers, sync):
+        B, K = 32, 3
+        node_bs = EdgeBatchSampler.required_node_batch(B, K)
+        s = DistributedSampler(book, hp.partitions, [5, 5], node_bs,
+                               machine=0, seed=25)
+        es = EdgeBatchSampler(s, e_src, e_dst, owned, B, K, seed=26)
+        pipe = EdgeMinibatchPipeline(es, store.client(0), "feat",
+                                     sync=sync, non_stop=False,
+                                     to_device=False, seed=27,
+                                     sample_workers=workers)
+        return _hash_edge_stream(pipe)
+
+    h_sync, n_sync = run(1, sync=True)
+    assert n_sync == 2 * (512 // 32)
+    for w in WORKER_COUNTS:
+        h_w, n_w = run(w, sync=False)
+        assert n_w == n_sync
+        assert h_w == h_sync, f"sample_workers={w} changed the edge stream"
+
+
+# ---------------------------------------------------------------------------
+# per-owner request coalescing (typed dispatch)
+# ---------------------------------------------------------------------------
+
+def test_typed_dispatch_coalesces_requests(hetero_world):
+    ds, hp, typed, _ = hetero_world
+    book = hp.book
+    tp = Transport(NetworkModel())
+    s = DistributedSampler(book, hp.partitions, [dict(FANOUTS_TYPED)] * 2,
+                           16, machine=0, transport=tp, seed=35,
+                           schema=ds.schema,
+                           ntype_of_node=typed.ntype_of_node)
+    seeds = book.old2new_node[ds.train_nids][:16]
+    for i in range(3):
+        s.sample(seeds, batch_index=i, epoch=0)
+    st = s.stats
+    n_active = len([k for k, v in FANOUTS_TYPED.items() if v > 0])
+    assert st.owner_requests > 0
+    # ONE request per remote owner per layer, carrying all active relations
+    assert st.relation_requests == st.owner_requests * n_active
+    assert st.request_coalescing_factor == n_active
+    # the transport counts exactly the coalesced requests — this is the
+    # table2 remote_requests column the benchmark reads
+    assert tp.stats()["remote_requests"] == st.owner_requests
+
+
+def test_untyped_dispatch_request_counting(homo_world):
+    ds, hp, _ = homo_world
+    book = hp.book
+    tp = Transport(NetworkModel())
+    s = DistributedSampler(book, hp.partitions, [10, 5], 32, machine=0,
+                           transport=tp, seed=36)
+    seeds = book.old2new_node[ds.train_nids][:32]
+    s.sample(seeds, batch_index=0, epoch=0)
+    st = s.stats
+    assert st.owner_requests > 0
+    assert st.relation_requests == st.owner_requests   # one relation
+    assert tp.stats()["remote_requests"] == st.owner_requests
+
+
+# ---------------------------------------------------------------------------
+# vectorized subsample kernel
+# ---------------------------------------------------------------------------
+
+def test_vectorized_subsample_valid_unique_positions():
+    rng = np.random.default_rng(3)
+    degs = rng.integers(6, 40, size=200).astype(np.int64)
+    starts = np.concatenate([[0], np.cumsum(degs)[:-1]])
+    fanout = 5
+    pos = _subsample_positions(starts, degs, fanout, rng)
+    assert pos.shape == (200 * fanout,)
+    for i in range(200):
+        p = pos[i * fanout:(i + 1) * fanout]
+        assert (p >= starts[i]).all() and (p < starts[i] + degs[i]).all()
+        assert len(np.unique(p)) == fanout, "drew a position twice"
+
+
+def test_vectorized_subsample_uniform():
+    """Each of a seed's positions is selected with probability
+    fanout/deg; 4000 trials at deg=6, fanout=2 put every empirical
+    frequency within ~5 sigma of 1/3."""
+    deg, fanout, trials = 6, 2, 4000
+    counts = np.zeros(deg, dtype=np.int64)
+    rng = np.random.default_rng(7)
+    for _ in range(trials):
+        p = _subsample_positions(np.array([0], dtype=np.int64),
+                                 np.array([deg], dtype=np.int64), fanout, rng)
+        counts[p] += 1
+    freq = counts / (trials * fanout)
+    sigma = np.sqrt((1 / deg) * (1 - 1 / deg) / (trials * fanout))
+    assert np.abs(freq - 1 / deg).max() < 5 * sigma, freq
+
+
+def test_vectorized_subsample_matches_loop_semantics():
+    """Same contract as the reference loop: fanout positions per seed,
+    within bounds, without replacement (streams differ — the loop is the
+    benchmark baseline, not a byte oracle)."""
+    rng_v = np.random.default_rng(11)
+    rng_l = np.random.default_rng(11)
+    degs = np.array([8, 12, 30], dtype=np.int64)
+    starts = np.array([0, 100, 200], dtype=np.int64)
+    pv = _subsample_positions(starts, degs, 4, rng_v)
+    pl = _subsample_positions_loop(starts, degs, 4, rng_l)
+    assert pv.shape == pl.shape
+    for i in range(3):
+        for p in (pv, pl):
+            seg = p[i * 4:(i + 1) * 4]
+            assert (seg >= starts[i]).all() and (seg < starts[i] + degs[i]).all()
+            assert len(np.unique(seg)) == 4
+
+
+# ---------------------------------------------------------------------------
+# non-stop epoch contract
+# ---------------------------------------------------------------------------
+
+def test_nonstop_pipeline_rejects_non_consecutive_epochs(homo_world):
+    ds, hp, store = homo_world
+    book = hp.book
+    seeds = book.old2new_node[ds.train_nids][:128]
+    s = DistributedSampler(book, hp.partitions, [5], 32, machine=0, seed=45)
+    pipe = MinibatchPipeline(s, store.client(0), "feat", seeds,
+                             sync=False, non_stop=True, to_device=False,
+                             seed=46)
+    first = list(pipe.epoch(3))           # any starting epoch is fine
+    assert len(first) == len(seeds) // 32 > 0
+    assert all(mb.epoch == 3 for mb in first)
+    with pytest.raises(ValueError, match="consecutive"):
+        next(pipe.epoch(7))               # skipping ahead is refused
+    cont = list(pipe.epoch(4))            # the consecutive epoch works
+    assert all(mb.epoch == 4 for mb in cont)
+    # stop() rewinds the contract: a fresh pipeline may start anywhere
+    pipe.stop()
+    again = list(pipe.epoch(0))
+    assert all(mb.epoch == 0 for mb in again)
+    pipe.stop()
