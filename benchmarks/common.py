@@ -15,7 +15,7 @@ import numpy as np
 from repro.core.kvstore import CacheConfig, NetworkModel
 from repro.graph import get_dataset
 from repro.models.gnn import GNNConfig
-from repro.training import DistGNNTrainer, TrainJobConfig
+from repro.api import DistGNNTrainer, TrainJobConfig
 
 # Simulated network. The paper's cluster had 100 Gbps NICs feeding 8 GPUs
 # per machine; this host drives its trainers with ONE core, so compute is

@@ -37,7 +37,11 @@ def _breakdown(tag: str, ds, cfg, t_load: float, epochs: int,
     for e in range(epochs):
         tr.train_epoch(e)
     t_train = time.perf_counter() - t0
-    stage_stats = tr.pipelines[0].stats_report()
+    # loader-level observability (repro.api): stage times, cache hit rate
+    # and sampler coalescing come from loader.stats_report() — no reaching
+    # into trainer internals
+    loader_rep = tr.loaders[0].stats_report()
+    stage_stats = loader_rep["stages"]
     sampling = tr.sampling_stats()
     tr.stop()
 
@@ -59,6 +63,11 @@ def _breakdown(tag: str, ds, cfg, t_load: float, epochs: int,
                  f"items={st['items']};starved_s={st['wait_in_s']:.3f};"
                  f"backpressure_s={st['wait_out_s']:.3f};"
                  f"workers={st.get('workers', 1)}")
+    if loader_rep["cache"] is not None:
+        csv_line(f"{tag}/loader/cache_hit_rate",
+                 loader_rep["cache"]["hit_rate"] * 100.0,
+                 f"hits={loader_rep['cache']['hits']};"
+                 f"misses={loader_rep['cache']['misses']}")
     if "edges_per_etype" in sampling:
         per = sampling["edges_per_etype"]
         csv_line(f"{tag}/edges_per_etype", float(sum(per.values())),

@@ -1,0 +1,24 @@
+"""DistDGLv2 on XLA — distributed hybrid CPU/GPU GNN training, reproduced.
+
+The supported public surface is ``repro.api`` (DESIGN.md §8); its names
+are re-exported here lazily (PEP 562), so ``from repro import DistGraph``
+works without paying any import cost for subpackages you don't touch.
+Subsystem internals stay importable under their own paths
+(``repro.core.*``, ``repro.graph``, ``repro.models``, ...).
+"""
+__all__ = [
+    "DistGraph", "DistTensor", "DistEmbedding", "SparseAdamConfig",
+    "NodeDataLoader", "EdgeDataLoader", "NodeBatch", "EdgeBatch",
+    "DistGNNTrainer", "TrainJobConfig",
+]
+
+
+def __getattr__(name: str):
+    if name in __all__:
+        from . import api
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(__all__) | set(globals()))

@@ -1,0 +1,38 @@
+"""``repro.api`` — the public, DGL-compatible surface (DESIGN.md §8).
+
+Everything a training script needs lives here::
+
+    from repro.api import DistGraph, NodeDataLoader, EdgeDataLoader
+
+    g = DistGraph(ds, num_machines=2, trainers_per_machine=2)
+    loader = NodeDataLoader(g, g.node_split(), [10, 5], batch_size=32)
+    for input_nodes, seeds, blocks in loader:
+        ...
+
+``DistGNNTrainer`` (the multi-trainer synchronous-SGD driver) and
+``TrainJobConfig`` are re-exported lazily: the trainer itself composes
+these façades, so importing it eagerly here would be circular.
+"""
+from ..core.kvstore.embedding import DistEmbedding, SparseAdamConfig
+from .dataloader import (EdgeBatch, EdgeDataLoader, NodeBatch,
+                         NodeDataLoader)
+from .dist_graph import DistGraph, DistTensor
+
+__all__ = [
+    "DistGraph", "DistTensor", "DistEmbedding", "SparseAdamConfig",
+    "NodeDataLoader", "EdgeDataLoader", "NodeBatch", "EdgeBatch",
+    "DistGNNTrainer", "TrainJobConfig",
+]
+
+_LAZY = ("DistGNNTrainer", "TrainJobConfig")
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        from ..training import trainer
+        return getattr(trainer, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,0 +1,366 @@
+"""DGL-compatible mini-batch loaders over the async pipeline.
+
+:class:`NodeDataLoader` / :class:`EdgeDataLoader` are true Python
+iterables wrapping ``MinibatchPipeline`` / ``EdgeMinibatchPipeline``, so
+the canonical DGL training loop works verbatim against the distributed
+stack::
+
+    loader = NodeDataLoader(g, train_nids, [10, 5], batch_size=32)
+    for epoch in range(E):
+        for input_nodes, seeds, blocks in loader:      # one epoch
+            ...
+
+Contract (DESIGN.md §8):
+
+* each ``iter(loader)`` serves ONE epoch and ends with a clean
+  ``StopIteration``; successive iterations advance the epoch counter, and
+  in non-stop mode ride the same live pipeline (PR 4's consecutive-epoch
+  contract) — per-batch bytes are identical to driving the pipeline
+  directly with the same seeds;
+* the yielded item unpacks as ``(input_nodes, seeds, blocks)`` (node) /
+  ``(input_nodes, pair_graph, blocks)`` (edge) but is a thin view object
+  also exposing ``input_feats`` / ``labels`` / ``seed_mask`` / ... and
+  ``model_input()`` — the exact dict the jitted train steps consume;
+* breaking out mid-epoch (``itertools.islice``, early ``break``) is safe:
+  ``close()`` — called by ``__exit__``, by a following ``iter()``, or
+  explicitly — drains the in-flight batches, joins every pool/feeder
+  thread and rewinds, so the next iteration re-serves the SAME epoch
+  byte-identically instead of leaking threads or mislabeled batches;
+* ``mode="eval"`` runs the deterministic inline evaluation protocol the
+  trainer has always used (sequential batches, ad-hoc epoch coordinates,
+  sampling RPCs uncharged) — no pipeline threads at all.
+
+Loaders are the ONLY place pipelines are constructed (enforced by
+``tools/check_docs.py``); ``DistGNNTrainer`` and both examples compose
+these façades.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from ..core.pipeline.minibatch import EdgeMinibatchPipeline, MinibatchPipeline
+from ..core.sampler import DistributedSampler, EdgeBatchSampler
+from .dist_graph import DistGraph
+
+_MODES = ("train", "eval")
+
+
+def _model_blocks(mb) -> List[dict]:
+    """The static per-layer arrays the jitted step consumes."""
+    return [dict(edge_src=b.edge_src, edge_dst=b.edge_dst,
+                 edge_mask=b.edge_mask, edge_types=b.edge_types)
+            for b in mb.blocks]
+
+
+class NodeBatch:
+    """One node mini-batch: unpacks as DGL's ``(input_nodes, seeds,
+    blocks)`` triple; attribute access reaches the full padded batch."""
+
+    __slots__ = ("minibatch", "device")
+
+    def __init__(self, minibatch, device: Optional[dict] = None):
+        self.minibatch = minibatch
+        self.device = device   # device-prefetched arrays, if enabled
+
+    def __iter__(self):
+        return iter((self.input_nodes, self.seeds, self.blocks))
+
+    input_nodes = property(lambda self: self.minibatch.input_gids)
+    input_ntypes = property(lambda self: self.minibatch.input_ntypes)
+    input_feats = property(lambda self: self.minibatch.input_feats)
+    seeds = property(lambda self: self.minibatch.seeds)
+    seed_mask = property(lambda self: self.minibatch.seed_mask)
+    labels = property(lambda self: self.minibatch.labels)
+    blocks = property(lambda self: self.minibatch.blocks)
+    epoch = property(lambda self: self.minibatch.epoch)
+    batch_index = property(lambda self: self.minibatch.batch_index)
+
+    def model_input(self) -> dict:
+        """The dict the jitted node-classification step consumes."""
+        if self.device is not None:
+            return {k: self.device[k]
+                    for k in ("input_feats", "labels", "seed_mask", "blocks")}
+        mb = self.minibatch
+        return dict(input_feats=mb.input_feats, labels=mb.labels,
+                    seed_mask=mb.seed_mask, blocks=_model_blocks(mb))
+
+
+class EdgeBatch(NodeBatch):
+    """One edge (link-prediction) mini-batch: unpacks as DGL's
+    ``(input_nodes, pair_graph, blocks)`` triple."""
+
+    __slots__ = ()
+
+    def __iter__(self):
+        return iter((self.input_nodes, self.pair_graph, self.blocks))
+
+    pair_graph = property(lambda self: self.minibatch.pair_graph)
+    pos_u = property(lambda self: self.minibatch.pos_u)
+    pos_v = property(lambda self: self.minibatch.pos_v)
+    neg_v = property(lambda self: self.minibatch.neg_v)
+    pair_mask = property(lambda self: self.minibatch.pair_mask)
+    edge_etypes = property(lambda self: self.minibatch.edge_etypes)
+    pos_src = property(lambda self: self.minibatch.pos_src)
+    pos_dst = property(lambda self: self.minibatch.pos_dst)
+    neg_dst = property(lambda self: self.minibatch.neg_dst)
+    pos_eids = property(lambda self: self.minibatch.pos_eids)
+    etype = property(lambda self: self.minibatch.etype)
+
+    def model_input(self) -> dict:
+        """The dict the jitted link-prediction step consumes."""
+        if self.device is not None:
+            return {k: self.device[k]
+                    for k in ("input_feats", "seed_mask", "pos_u", "pos_v",
+                              "neg_v", "pair_mask", "edge_etypes", "blocks")}
+        emb = self.minibatch
+        return dict(input_feats=emb.input_feats, seed_mask=emb.seed_mask,
+                    pos_u=emb.pos_u, pos_v=emb.pos_v, neg_v=emb.neg_v,
+                    pair_mask=emb.pair_mask, edge_etypes=emb.edge_etypes,
+                    blocks=_model_blocks(emb))
+
+
+class _BaseLoader:
+    """Shared loader protocol: epoch iteration, teardown, stats."""
+
+    _wrap_cls = NodeBatch
+
+    def __init__(self, g: DistGraph, mode: str):
+        if mode not in _MODES:
+            raise ValueError(f"unknown loader mode {mode!r}; have {_MODES}")
+        self.g = g
+        self.mode = mode
+        self.pipeline = None       # set by subclasses (train mode only)
+        self.sampler: Optional[DistributedSampler] = None
+        self.cache = None
+        self._next_epoch = 0
+        self._mid_epoch = False
+
+    # -- iteration ------------------------------------------------------
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+    def _eval_iter(self) -> Iterator:
+        raise NotImplementedError
+
+    def _wrap(self, item):
+        if isinstance(item, tuple):   # device-prefetch stage: (batch, dev)
+            mb, dev = item
+            return self._wrap_cls(mb, device=dev)
+        return self._wrap_cls(item)
+
+    def epoch(self, epoch: int) -> Iterator:
+        """Iterate one specific epoch's batches (the trainer's driver; in
+        non-stop mode epochs must be requested consecutively)."""
+        if self.mode == "eval":
+            yield from self._eval_iter()
+            return
+        if self._mid_epoch:
+            # previous iteration abandoned mid-epoch: drain + rewind so
+            # this epoch starts from a clean schedule (byte-identical to
+            # a fresh run of the same epoch)
+            self.close(_rewind_epoch=False)
+        n = len(self)
+        served = 0
+        for item in self.pipeline.epoch(epoch):
+            # only a stream some batch actually left is mid-epoch; a call
+            # that errors before its first batch leaves the stream intact
+            self._mid_epoch = True
+            served += 1
+            if served >= n:
+                # epoch boundary reached the moment the last batch left
+                # the pipeline — a consumer stopping right after it has
+                # cleanly finished the epoch
+                self._mid_epoch = False
+                self._next_epoch = epoch + 1
+            yield self._wrap(item)
+
+    def __iter__(self) -> Iterator:
+        """One epoch per iteration, auto-advancing; an epoch abandoned
+        mid-way does not count and is re-served from scratch."""
+        return self.epoch(self._next_epoch)
+
+    # -- teardown -------------------------------------------------------
+    def close(self, _rewind_epoch: bool = True) -> None:
+        """Drain in-flight batches, join every pipeline thread, rewind.
+        A closed loader is reusable; plain iteration restarts from epoch
+        0 (explicit ``epoch()`` callers drive their own numbering)."""
+        if self.pipeline is not None:
+            self.pipeline.stop()
+        self._mid_epoch = False
+        if _rewind_epoch:
+            self._next_epoch = 0
+
+    # alias matching the pipelines' own verb
+    stop = close
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- feature pulls (eval path; the pipeline does this in train mode) -
+    def _pull_feats(self, mb) -> np.ndarray:
+        g = self.g
+        if g.hetero:
+            return self._client.pull_typed(g.feat_name, mb.input_gids,
+                                           g.typed, ntypes=mb.input_ntypes)
+        return self._client.pull(g.feat_name, mb.input_gids)
+
+    # -- stats ----------------------------------------------------------
+    @property
+    def non_stop(self) -> bool:
+        return self.pipeline is not None and self.pipeline.non_stop
+
+    def stats_report(self) -> dict:
+        """Loader-level observability: per-stage pipeline times, cache
+        hit rate, sampler request coalescing — everything the Table 2
+        benchmark reads, without reaching into trainer internals."""
+        out = {"batches_per_epoch": len(self),
+               "stages": ({} if self.pipeline is None
+                          else self.pipeline.stats_report()),
+               "sampler": self.sampler.stats.as_dict(),
+               "cache": None}
+        if self.cache is not None:
+            c = self.cache.stats()
+            c["hit_rate"] = c["hits"] / max(c["hits"] + c["misses"], 1)
+            out["cache"] = c
+        return out
+
+
+class NodeDataLoader(_BaseLoader):
+    """DGL's ``NodeDataLoader`` over the distributed stack.
+
+    Parameters mirror the trainer's wiring: ``fanouts`` (per layer; int or
+    ``{etype: fanout}``), ``batch_size`` seeds per batch, ``labels``
+    aligned with ``nids`` (host-resident — label bytes never cross the
+    transport, as always), optional per-trainer hot-vertex ``cache``
+    (:meth:`DistGraph.feature_cache`), ``sample_workers`` pool threads,
+    ``device_prefetch`` to ship batches to the accelerator from the
+    pipeline. ``seed`` drives the epoch schedule + pipeline, and
+    ``sampler_seed`` the neighbor draws (defaults keep them disjoint).
+
+    ``mode="eval"`` is the deterministic inline evaluation protocol:
+    sequential (unshuffled) batches over ``nids``, ad-hoc sampler
+    coordinates, no pipeline threads, sampling RPCs uncharged.
+    """
+
+    def __init__(self, g: DistGraph, nids: np.ndarray, fanouts, *,
+                 batch_size: int, labels: Optional[np.ndarray] = None,
+                 shuffle: bool = True, sample_workers: int = 1,
+                 cache=None, device_prefetch: bool = False,
+                 sync: bool = False, non_stop: bool = True,
+                 depths: Optional[dict] = None, seed: int = 0,
+                 sampler_seed: Optional[int] = None, mode: str = "train"):
+        super().__init__(g, mode)
+        self.nids = np.asarray(nids, dtype=np.int64)
+        self.labels = labels
+        self.batch_size = int(batch_size)
+        eval_mode = mode == "eval"
+        self.sampler = DistributedSampler(
+            g.book, g.partitions, fanouts, self.batch_size,
+            machine=g.machine,
+            transport=None if eval_mode else g.transport,
+            seed=seed + 100 if sampler_seed is None else sampler_seed,
+            schema=g.schema if g.hetero else None,
+            ntype_of_node=g.typed.ntype_of_node if g.hetero else None)
+        self._client = g.new_client()
+        self.cache = cache
+        if not eval_mode:
+            self.pipeline = MinibatchPipeline(
+                self.sampler, self._client, g.feat_name, self.nids,
+                labels=labels, sync=sync, non_stop=non_stop, depths=depths,
+                to_device=device_prefetch, seed=seed, typed=g.typed,
+                cache=cache, sample_workers=sample_workers, shuffle=shuffle)
+
+    def __len__(self) -> int:
+        if self.pipeline is not None:
+            return self.pipeline.batches_per_epoch
+        return len(self.nids) // self.batch_size
+
+    def _eval_iter(self) -> Iterator[NodeBatch]:
+        bs = self.batch_size
+        for b in range(len(self)):
+            chunk = self.nids[b * bs:(b + 1) * bs]
+            lab = (None if self.labels is None
+                   else self.labels[b * bs:(b + 1) * bs])
+            mb = self.sampler.sample(chunk, labels=lab, batch_index=b)
+            mb.input_feats = self._pull_feats(mb)
+            yield NodeBatch(mb)
+
+
+class EdgeDataLoader(_BaseLoader):
+    """DGL's ``EdgeDataLoader``: positive-edge mini-batches with negative
+    sampling and endpoint ego-networks (DESIGN.md §6), over the same async
+    pipeline. ``batch_size`` counts POSITIVE EDGES; the node sampler runs
+    at the derived endpoint capacity ``2B + B*K`` automatically.
+
+    ``eids`` is this trainer's positive-edge pool (NEW edge-id space —
+    :meth:`DistGraph.edge_split`). On the typed path each scheduled batch
+    carries one relation and negatives are drawn type-correctly from the
+    relation's declared dst node type. ``edge_seed`` drives the positive
+    schedule and negative draws; ``mode="eval"`` runs the deterministic
+    evaluation protocol (fresh schedule from ``edge_seed`` each iteration,
+    ad-hoc sampler coordinates, sampling RPCs uncharged).
+    """
+
+    _wrap_cls = EdgeBatch
+
+    def __init__(self, g: DistGraph, eids: np.ndarray, fanouts, *,
+                 batch_size: int, num_negs: int = 16,
+                 neg_mode: str = "uniform", neg_exclude: bool = False,
+                 sample_workers: int = 1, cache=None,
+                 device_prefetch: bool = False, sync: bool = False,
+                 non_stop: bool = True, depths: Optional[dict] = None,
+                 seed: int = 0, sampler_seed: Optional[int] = None,
+                 edge_seed: Optional[int] = None, mode: str = "train"):
+        super().__init__(g, mode)
+        self.batch_size = int(batch_size)
+        self.num_negs = int(num_negs)
+        eval_mode = mode == "eval"
+        node_bs = EdgeBatchSampler.required_node_batch(
+            batch_size, num_negs, neg_mode)
+        self.sampler = DistributedSampler(
+            g.book, g.partitions, fanouts, node_bs, machine=g.machine,
+            transport=None if eval_mode else g.transport,
+            seed=seed + 100 if sampler_seed is None else sampler_seed,
+            schema=g.schema if g.hetero else None,
+            ntype_of_node=g.typed.ntype_of_node if g.hetero else None)
+        neg_pools = etype_of_edge = schema = None
+        if g.hetero:
+            schema = g.schema
+            etype_of_edge = g.typed.etype_of_edge
+            neg_pools = [g.typed.type2node[schema.dst_ntype_id(r)]
+                         for r in range(schema.num_etypes)]
+        e_src, e_dst = g.edge_endpoints()
+        self._edge_seed = seed + 300 if edge_seed is None else edge_seed
+        self.edge_sampler = EdgeBatchSampler(
+            self.sampler, e_src, e_dst, np.asarray(eids, dtype=np.int64),
+            batch_size, num_negs, neg_mode=neg_mode,
+            etype_of_edge=etype_of_edge, schema=schema, neg_pools=neg_pools,
+            exclude_batch_positives=neg_exclude, seed=self._edge_seed)
+        self._client = g.new_client()
+        self.cache = cache
+        if not eval_mode:
+            self.pipeline = EdgeMinibatchPipeline(
+                self.edge_sampler, self._client, g.feat_name, sync=sync,
+                non_stop=non_stop, depths=depths, to_device=device_prefetch,
+                seed=seed, typed=g.typed, cache=cache,
+                sample_workers=sample_workers)
+
+    def __len__(self) -> int:
+        return self.edge_sampler.batches_per_epoch
+
+    def _eval_iter(self) -> Iterator[EdgeBatch]:
+        # the trainer's LP evaluation protocol: a fresh deterministic
+        # schedule per iteration, so eval before/after training ranks the
+        # same edges against the same candidates
+        rng = np.random.default_rng(self._edge_seed)
+        for _e, b, et, eids in self.edge_sampler.schedule(rng, 0):
+            emb = self.edge_sampler.sample_edges(eids, etype=et,
+                                                 batch_index=b)
+            emb.input_feats = self._pull_feats(emb)
+            yield EdgeBatch(emb)

@@ -25,7 +25,14 @@ class SparseAdamConfig:
 
 
 class DistEmbedding:
-    """num x dim learnable table, sharded by a node partition policy."""
+    """num x dim learnable table, sharded by a node partition policy.
+
+    Part of the public ``repro.api`` surface (DESIGN.md §8's
+    ``dgl.distributed.DistEmbedding`` analogue): the table registers
+    *mutable* (version-tracked), so it is also reachable as a writable
+    ``DistTensor`` through ``DistGraph.ndata`` — row writes bump versions
+    and invalidate trainer caches, exactly like ``push_grad``'s updates.
+    """
 
     def __init__(self, store: DistKVStore, name: str, num: int, dim: int,
                  policy_name: str, *, seed: int = 0,
@@ -35,7 +42,9 @@ class DistEmbedding:
         assert pol.total == num, (pol.total, num)
         self.store = store
         self.name = name
+        self.num = num
         self.dim = dim
+        self.policy_name = policy_name
         self.optim = optim or SparseAdamConfig()
         rng = np.random.default_rng(seed)
         scale = 1.0 / np.sqrt(dim)
@@ -47,6 +56,13 @@ class DistEmbedding:
         store.init_data(name + "__m", (dim,), np.float32, policy_name)
         store.init_data(name + "__v", (dim,), np.float32, policy_name)
         store.init_data(name + "__t", (), np.int64, policy_name)
+
+    def __len__(self) -> int:
+        return self.num
+
+    @property
+    def shape(self) -> tuple:
+        return (self.num, self.dim)
 
     def pull(self, client: KVClient, ids: np.ndarray) -> np.ndarray:
         return client.pull(self.name, ids)

@@ -192,6 +192,25 @@ class DistKVStore:
     def policy_for(self, name: str) -> PartitionPolicy:
         return self.policies[self._meta[name][0]]
 
+    # -- metadata introspection (the repro.api DistTensor façade reads
+    #    these instead of poking _meta / server shards directly) ----------
+    def has_tensor(self, name: str) -> bool:
+        return name in self._meta
+
+    def tensor_names(self) -> List[str]:
+        """Registered tensor names, in registration order."""
+        return list(self._meta)
+
+    def policy_name_of(self, name: str) -> str:
+        return self._meta[name][0]
+
+    def dtype_of(self, name: str) -> np.dtype:
+        return self._meta[name][1]
+
+    def row_shape(self, name: str) -> tuple:
+        """Per-row feature shape (without the leading id axis)."""
+        return tuple(self.servers[0].local_view(name).shape[1:])
+
     def gather_all(self, name: str) -> np.ndarray:
         """Debug/checkpoint helper: reassemble the full tensor."""
         return np.concatenate([s.local_view(name) for s in self.servers], axis=0)

@@ -47,9 +47,11 @@ def _device_blocks(mb) -> list:
 
 def _epoch_schedule(seeds: np.ndarray, labels: Optional[np.ndarray],
                     batch_size: int, rng: np.random.Generator, epoch: int,
-                    drop_last: bool = True):
-    """Stage 1: uniform random batch schedule over this trainer's seed set."""
-    perm = rng.permutation(len(seeds))
+                    drop_last: bool = True, shuffle: bool = True):
+    """Stage 1: uniform random batch schedule over this trainer's seed set
+    (``shuffle=False``: fixed sequential batches — inference/eval order)."""
+    perm = (rng.permutation(len(seeds)) if shuffle
+            else np.arange(len(seeds), dtype=np.int64))
     n_batches = len(seeds) // batch_size if drop_last else -(-len(seeds) // batch_size)
     for b in range(n_batches):
         sel = perm[b * batch_size:(b + 1) * batch_size]
@@ -64,7 +66,7 @@ class MinibatchPipeline:
                  depths: dict | None = None,
                  sync: bool = False, non_stop: bool = True,
                  to_device: bool = True, seed: int = 0, typed=None,
-                 cache=None, sample_workers: int = 1):
+                 cache=None, sample_workers: int = 1, shuffle: bool = True):
         self.sampler = sampler
         self.kv_client = kv_client
         self.feat_name = feat_name
@@ -94,10 +96,14 @@ class MinibatchPipeline:
         # sampling-stage worker pool size (§5.5's "multiple sampling
         # workers per trainer"); batches are byte-identical for any value
         self.sample_workers = max(int(sample_workers), 1)
+        self.shuffle = shuffle
         self.batches_per_epoch = len(self.seeds) // self.batch_size
         self._pipe: Optional[AsyncPipeline] = None
         self._out_iter = None
         self._nonstop_epoch: Optional[int] = None
+        # batches pulled off the non-stop stream within the current epoch:
+        # the mid-epoch abandonment guard (see epoch()) keys on it
+        self._epoch_pos = 0
         self._lock = threading.Lock()
 
     # ---- stages -------------------------------------------------------
@@ -138,7 +144,8 @@ class MinibatchPipeline:
     def _schedule_source(self, epochs: Iterator[int]):
         for e in epochs:
             yield from _epoch_schedule(self.seeds, self.labels,
-                                       self.batch_size, self._epoch_rng(e), e)
+                                       self.batch_size, self._epoch_rng(e), e,
+                                       shuffle=self.shuffle)
 
     def _build(self, epochs) -> AsyncPipeline:
         stages = [
@@ -162,9 +169,19 @@ class MinibatchPipeline:
         scheduled under that assumption. A non-consecutive request raises
         instead of silently serving batches labeled (and permuted) for a
         different epoch. Abandoning an epoch iterator mid-epoch leaves the
-        remaining batches in flight and is likewise unsupported."""
+        remaining batches in flight: a later ``epoch()`` call raises
+        instead of serving another epoch's schedule under a stale label —
+        ``stop()`` drains the in-flight work and rewinds (the loader
+        façade in ``repro.api`` does exactly that on early ``close()``)."""
         if self.non_stop and not self.sync:
             with self._lock:
+                if (self._pipe is not None
+                        and self._epoch_pos not in (0, self.batches_per_epoch)):
+                    raise ValueError(
+                        f"non-stop pipeline abandoned mid-epoch (batch "
+                        f"{self._epoch_pos}/{self.batches_per_epoch} of epoch "
+                        f"{self._nonstop_epoch - 1}) — stop() to drain and "
+                        f"rewind before starting another epoch")
                 if self._pipe is None:
                     self._nonstop_epoch = epoch
 
@@ -182,8 +199,14 @@ class MinibatchPipeline:
                         f"expected epoch {self._nonstop_epoch}, got {epoch} "
                         f"(stop() the pipeline to rewind or skip)")
                 self._nonstop_epoch = epoch + 1
+                self._epoch_pos = 0
             for _ in range(self.batches_per_epoch):
-                yield next(self._out_iter)
+                item = next(self._out_iter)
+                # count at pull time: once off the stream, the stream is
+                # past it — a consumer that stops right after taking the
+                # last batch has still cleanly finished the epoch
+                self._epoch_pos += 1
+                yield item
         else:
             pipe = self._build(iter([epoch]))
             self._pipe = pipe
@@ -195,6 +218,7 @@ class MinibatchPipeline:
             self._pipe = None
             self._out_iter = None
             self._nonstop_epoch = None
+            self._epoch_pos = 0
 
     def stats_report(self) -> dict:
         return {} if self._pipe is None else self._pipe.stats_report()

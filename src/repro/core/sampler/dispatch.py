@@ -75,6 +75,19 @@ class SamplerStats:
         """How many per-relation requests each issued request replaced."""
         return self.relation_requests / max(self.owner_requests, 1)
 
+    def as_dict(self) -> dict:
+        """Flat report for loader/benchmark consumers (repro.api's
+        ``stats_report`` surfaces this instead of the raw dataclass)."""
+        return {"batches": self.batches,
+                "seeds_total": self.seeds_total,
+                "seeds_remote": self.seeds_remote,
+                "remote_seed_frac": self.remote_seed_frac,
+                "edges_total": self.edges_total,
+                "input_nodes_total": self.input_nodes_total,
+                "owner_requests": self.owner_requests,
+                "relation_requests": self.relation_requests,
+                "coalescing_factor": self.request_coalescing_factor}
+
 
 class DistributedSampler:
     """One trainer's sampler (runs in the sampling worker pool, §5.5).

@@ -57,6 +57,33 @@ def edge_endpoints(book: PartitionBook, g: CSRGraph
             book.old2new_node[dst_old[book.new2old_edge]])
 
 
+@dataclasses.dataclass(frozen=True)
+class PairGraph:
+    """The scoring-head view of one edge mini-batch — what DGL hands a
+    link-prediction loop as the (positive+negative) *pair graph*. All
+    index arrays point at the seed axis of the underlying node mini-batch
+    (= the rows of the encoder's output embeddings); gid arrays carry the
+    global ids the scheduler/negative-sampler actually drew."""
+    pos_u: np.ndarray          # (B,) int32 seed-axis rows of positive srcs
+    pos_v: np.ndarray          # (B,) int32 seed-axis rows of positive dsts
+    neg_v: np.ndarray          # (B, K) int32 seed-axis rows of negatives
+    pair_mask: np.ndarray      # (B,) bool — live positive edges
+    pos_eids: np.ndarray       # (B,) int64 NEW edge ids (padded by repeat)
+    pos_src: np.ndarray        # (B,) int64 gids
+    pos_dst: np.ndarray        # (B,) int64 gids
+    neg_dst: np.ndarray        # (B, K) int64 gids
+    edge_etypes: np.ndarray    # (B,) int32 relation id per positive edge
+    etype: int = -1            # single-relation batch id (-1 = untyped)
+
+    @property
+    def batch_edges(self) -> int:
+        return len(self.pos_u)
+
+    @property
+    def num_negs(self) -> int:
+        return int(self.neg_v.shape[1])
+
+
 @dataclasses.dataclass
 class EdgeMiniBatch:
     """One link-prediction batch: a node ``MiniBatch`` over the endpoint
@@ -124,6 +151,16 @@ class EdgeMiniBatch:
     @property
     def num_negs(self) -> int:
         return self.neg_v.shape[1]
+
+    @property
+    def pair_graph(self) -> PairGraph:
+        """The scoring-head slice of this batch (what ``EdgeDataLoader``
+        yields as the middle element of its DGL-style triple)."""
+        return PairGraph(pos_u=self.pos_u, pos_v=self.pos_v,
+                         neg_v=self.neg_v, pair_mask=self.pair_mask,
+                         pos_eids=self.pos_eids, pos_src=self.pos_src,
+                         pos_dst=self.pos_dst, neg_dst=self.neg_dst,
+                         edge_etypes=self.edge_etypes, etype=self.etype)
 
 
 class NegativeSampler:

@@ -24,7 +24,7 @@ def run_gnn(args):
     import jax
     from ..configs import get_config
     from ..graph import get_dataset
-    from ..training import DistGNNTrainer, TrainJobConfig
+    from ..api import DistGNNTrainer, TrainJobConfig
     from ..core.kvstore import CacheConfig, NetworkModel
 
     cfg = get_config(args.arch)

@@ -1,3 +1,24 @@
-from .trainer import DistGNNTrainer, TrainJobConfig
+"""Deprecated import location — the public surface moved to ``repro.api``
+(DESIGN.md §8). ``from repro.training import DistGNNTrainer`` keeps
+working through this shim but emits a :class:`DeprecationWarning`;
+``repro.training.trainer`` (the implementation module) stays a regular,
+warning-free internal import.
+"""
+import warnings
 
 __all__ = ["DistGNNTrainer", "TrainJobConfig"]
+
+
+def __getattr__(name: str):
+    if name in __all__:
+        warnings.warn(
+            f"importing {name} from repro.training is deprecated; "
+            f"use `from repro.api import {name}` (DESIGN.md §8)",
+            DeprecationWarning, stacklevel=2)
+        from . import trainer
+        return getattr(trainer, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

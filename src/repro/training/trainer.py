@@ -1,11 +1,13 @@
 """Distributed synchronous mini-batch GNN training (§5.1, §5.6).
 
-``DistGNNTrainer`` wires the whole DistDGLv2 stack together for a cluster of
-``num_machines × trainers_per_machine`` trainers:
-
-  graph -> hierarchical partition -> KVStore shards -> per-trainer seed
-  split -> per-trainer async sampling pipelines -> one *synchronous* SGD
-  step per iteration across all trainers (data parallelism).
+``DistGNNTrainer`` is a thin composition over the public ``repro.api``
+surface: one :class:`~repro.api.DistGraph` world (partition book + KVStore
++ typed relation views), per-trainer :class:`~repro.api.NodeDataLoader` /
+:class:`~repro.api.EdgeDataLoader` instances over the async pipeline, and
+one *synchronous* SGD step per iteration across all trainers (data
+parallelism). Anything this class does, a user script can do with the
+same façades — the trainer only adds the multi-trainer stacking and the
+jitted step (DESIGN.md §8).
 
 On a real TPU pod each trainer is one chip and the gradient all-reduce is
 GSPMD's; in this one-host harness the T trainers' mini-batches are stacked
@@ -21,6 +23,7 @@ The constructor options are the Fig. 14 ablation axes:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from typing import List, Optional
 
@@ -28,14 +31,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.kvstore import (CacheConfig, DistKVStore, FeatureCache,
-                            NetworkModel, PartitionPolicy, Transport,
-                            halo_access_counts)
-from ..core.partition import (build_typed_partition, hierarchical_partition,
-                              locality_report, split_training_set)
-from ..core.pipeline import EdgeMinibatchPipeline, MinibatchPipeline
-from ..core.sampler import (DistributedSampler, EdgeBatchSampler,
-                            edge_endpoints)
+from ..api.dataloader import EdgeDataLoader, NodeDataLoader
+from ..api.dist_graph import DistGraph
+from ..core.kvstore import CacheConfig, NetworkModel
+from ..core.sampler import EdgeBatchSampler
 from ..graph.datasets import GraphDataset
 from ..models.gnn import (GNNConfig, apply_gnn, init_gnn, init_lp_head,
                           lp_loss_from_scores, lp_metrics, lp_pair_scores,
@@ -97,123 +96,77 @@ class DistGNNTrainer:
                                                 batch_size=node_bs)
         else:
             self.node_cfg = model_cfg
-        t0 = time.perf_counter()
-        self.hp = hierarchical_partition(
-            ds.graph, job.num_machines, job.trainers_per_machine,
-            split_mask=ds.split_mask, method=job.partition_method,
-            seed=job.seed)
-        self.partition_time_s = time.perf_counter() - t0
-        book = self.hp.book
 
-        # KVStore: features (and labels, so remote trainers pull them too)
-        self.transport = Transport(job.network or NetworkModel())
-        feats_new = ds.feats[book.new2old_node]
-        self.labels_new = ds.labels[book.new2old_node]
-
-        # heterograph path: typed per-ntype/per-etype policies + per-ntype
-        # feature tensors; activated by a schema'd dataset + per-relation
-        # fanouts in the model config (an int-fanout config on the same
-        # dataset keeps the legacy fused path)
-        self.schema = getattr(ds, "schema", None)
-        self.hetero = self.schema is not None and model_cfg.typed
-        policies = {"node": PartitionPolicy("node", book.node_offsets),
-                    "edge": PartitionPolicy("edge", book.edge_offsets)}
-        self.typed = None
-        if self.hetero:
-            g = ds.graph
-            ntypes_new = (None if g.ntypes is None
-                          else g.ntypes[book.new2old_node])
-            etypes_new = (None if g.etypes is None
-                          else g.etypes[book.new2old_edge])
-            self.typed = build_typed_partition(book, self.schema,
-                                               ntypes_new, etypes_new)
-            policies.update(self.typed.policies())
-        self.store = DistKVStore(policies, transport=self.transport)
-        if self.hetero:
-            # each node type registers its own tensor under its own policy;
-            # rows are type-local, ordered to match the policy's offsets
-            for t, nt in enumerate(self.schema.ntypes):
-                rows = ds.feats[book.new2old_node[self.typed.type2node[t]]]
-                self.store.init_data(f"feat:{nt}", rows.shape[1:],
-                                     np.float32, f"node:{nt}",
-                                     full_array=rows)
-        else:
-            self.store.init_data("feat", feats_new.shape[1:], np.float32,
-                                 "node", full_array=feats_new)
+        # the world: partition + KVStore + typed views, behind one handle
+        self.graph = DistGraph(
+            ds, num_machines=job.num_machines,
+            trainers_per_machine=job.trainers_per_machine,
+            partition_method=job.partition_method,
+            hetero=model_cfg.typed, seed=job.seed, network=job.network)
+        self.hp = self.graph.hp
+        self.partition_time_s = self.graph.partition_time_s
+        self.transport = self.graph.transport
+        self.store = self.graph.store
+        self.labels_new = self.graph.labels
+        self.schema = self.graph.schema
+        self.hetero = self.graph.hetero
+        self.typed = self.graph.typed
 
         # per-trainer seed split (§5.6.1): node tasks split the training
         # vertices; link prediction splits each machine's OWNED edge range
-        # (edges live with their dst vertex) into contiguous per-trainer
-        # pools — "we may use all edges to train a model" (§6)
+        # into equalized per-trainer pools — "we may use all edges to
+        # train a model" (§6). Both splits live on DistGraph now.
         if self.task == "link_prediction":
-            self.e_src, self.e_dst = edge_endpoints(book, ds.graph)
-            self.trainer_edges: List[np.ndarray] = []
-            T = job.trainers_per_machine
-            spans = [(int(book.edge_offsets[m]), int(book.edge_offsets[m + 1]))
-                     for m in range(job.num_machines)]
-            # equal pool size for EVERY trainer (the global equal-count
-            # requirement of §5.6.1: synchronous SGD needs same-size
-            # schedules): each machine range is cut into T contiguous
-            # chunks and each trainer keeps the first min-across-machines
-            # chunk size; the surplus of edge-richer machines is dropped,
-            # like the node split's tail
-            per = min((ehi - elo) // T for elo, ehi in spans)
-            for elo, ehi in spans:
-                chunk = (ehi - elo) // T
-                for t in range(T):
-                    self.trainer_edges.append(np.arange(
-                        elo + t * chunk, elo + t * chunk + per,
-                        dtype=np.int64))
+            self.e_src, self.e_dst = self.graph.edge_endpoints()
+            self.trainer_edges: List[np.ndarray] = self.graph.edge_splits()
             # locality of the positive SOURCES (dsts are local by
             # construction — edges are owned by their dst's machine)
-            self.locality = locality_report(
-                self.hp, [self.e_src[e] for e in self.trainer_edges])
+            self.locality = self.graph.locality_report(
+                [self.e_src[e] for e in self.trainer_edges])
         else:
-            train_new = book.old2new_node[ds.train_nids]
-            self.trainer_seeds = split_training_set(
-                self.hp, train_new, use_level2=job.use_level2, seed=job.seed)
-            self.locality = locality_report(self.hp, self.trainer_seeds)
+            self.trainer_seeds = self.graph.node_splits(
+                self.graph.train_nids, use_level2=job.use_level2,
+                seed=job.seed)
+            self.locality = self.graph.locality_report(self.trainer_seeds)
 
-        # per-trainer samplers + pipelines (+ optional hot-vertex caches)
-        self.num_trainers = self.hp.num_trainers
-        self.samplers: List[DistributedSampler] = []
-        self.edge_samplers: List[EdgeBatchSampler] = []
-        self.pipelines: List[MinibatchPipeline] = []
-        self.caches: List[Optional[FeatureCache]] = []
+        # per-trainer loaders (each owns its sampler, client, cache and
+        # async pipeline); the trainer only stacks their batches
+        self.num_trainers = self.graph.num_trainers
+        self.loaders: List[NodeDataLoader] = []
         for ti in range(self.num_trainers):
-            machine = ti // job.trainers_per_machine
-            s = DistributedSampler(
-                book, self.hp.partitions, self.node_cfg.fanouts,
-                self.node_cfg.batch_size, machine=machine,
-                transport=self.transport, seed=job.seed + 100 + ti,
-                schema=self.schema if self.hetero else None,
-                ntype_of_node=(self.typed.ntype_of_node
-                               if self.hetero else None))
-            client = self.store.client(machine)
-            cache = self._build_cache(client, machine) if job.cache else None
+            gt = self.graph.trainer_view(ti)
+            cache = gt.feature_cache(job.cache)
             if self.task == "link_prediction":
-                es = self._build_edge_sampler(s, self.trainer_edges[ti],
-                                              seed=job.seed + 300 + ti)
-                p = EdgeMinibatchPipeline(
-                    es, client, "feat", sync=job.sync,
-                    non_stop=job.non_stop, depths=job.pipeline_depths,
-                    to_device=False, seed=job.seed + 200 + ti,
-                    typed=self.typed, cache=cache,
-                    sample_workers=job.sample_workers)
-                self.edge_samplers.append(es)
+                ld = EdgeDataLoader(
+                    gt, self.trainer_edges[ti], self.node_cfg.fanouts,
+                    batch_size=model_cfg.batch_size, num_negs=job.num_negs,
+                    neg_mode=job.neg_mode, neg_exclude=job.neg_exclude,
+                    sync=job.sync, non_stop=job.non_stop,
+                    depths=job.pipeline_depths, device_prefetch=False,
+                    cache=cache, sample_workers=job.sample_workers,
+                    seed=job.seed + 200 + ti,
+                    sampler_seed=job.seed + 100 + ti,
+                    edge_seed=job.seed + 300 + ti)
             else:
                 seeds = self.trainer_seeds[ti]
-                p = MinibatchPipeline(
-                    s, client, "feat", seeds,
+                ld = NodeDataLoader(
+                    gt, seeds, self.node_cfg.fanouts,
+                    batch_size=self.node_cfg.batch_size,
                     labels=self.labels_new[seeds], sync=job.sync,
                     non_stop=job.non_stop, depths=job.pipeline_depths,
-                    to_device=False, seed=job.seed + 200 + ti,
-                    typed=self.typed, cache=cache,
-                    sample_workers=job.sample_workers)
-            self.samplers.append(s)
-            self.pipelines.append(p)
-            self.caches.append(cache)
-        self.batches_per_epoch = min(p.batches_per_epoch for p in self.pipelines)
+                    device_prefetch=False, cache=cache,
+                    sample_workers=job.sample_workers,
+                    seed=job.seed + 200 + ti,
+                    sampler_seed=job.seed + 100 + ti)
+            self.loaders.append(ld)
+        # component views (stats, tests, benchmarks)
+        self.samplers = [ld.sampler for ld in self.loaders]
+        self.edge_samplers = [ld.edge_sampler for ld in self.loaders
+                              if isinstance(ld, EdgeDataLoader)]
+        self.pipelines = [ld.pipeline for ld in self.loaders]
+        self.caches = [ld.cache for ld in self.loaders]
+
+        self.batches_per_epoch = min(len(ld) for ld in self.loaders)
         if self.batches_per_epoch < 1:
             if self.task == "link_prediction":
                 raise ValueError(
@@ -236,66 +189,6 @@ class DistGNNTrainer:
         self._step = self._build_step()
         self._eval_ranks_fn = None
         self._eval_ranks_key = None
-
-    # ------------------------------------------------------------------
-    def _build_cache(self, client, machine: int) -> FeatureCache:
-        """One trainer's hot-vertex cache over remote feature rows,
-        registered for every feature tensor and (optionally) pre-warmed
-        from the machine partition's halo access counts — the partition
-        book's static prediction of which remote rows the sampler will
-        keep pulling (§5.3's locality argument, attacked from the other
-        side)."""
-        cache = FeatureCache(self.job.cache, self.store)
-        names = ([f"feat:{nt}" for nt in self.schema.ntypes]
-                 if self.hetero else ["feat"])
-        for name in names:
-            cache.register(self.store, name)
-        # NOTE: MinibatchPipeline(cache=...) owns the client<->cache
-        # binding; warm() pulls with _bypass_cache and needs no attach
-        if self.job.cache.prewarm:
-            gids, counts = halo_access_counts(self.hp.partitions[machine])
-            if self.hetero:
-                types, tids = self.typed.nid2typed(gids)
-                for t, nt in enumerate(self.schema.ntypes):
-                    m = types == t
-                    if m.any():
-                        cache.warm(client, f"feat:{nt}", tids[m], counts[m])
-            else:
-                cache.warm(client, "feat", gids, counts)
-        return cache
-
-    # ------------------------------------------------------------------
-    def _build_edge_sampler(self, node_sampler: DistributedSampler,
-                            owned_eids: np.ndarray, seed: int, *,
-                            batch_edges: Optional[int] = None,
-                            num_negs: Optional[int] = None,
-                            neg_mode: Optional[str] = None,
-                            exclude: Optional[bool] = None
-                            ) -> EdgeBatchSampler:
-        """One positive-edge scheduler + negative sampler over a pool of
-        owned edges; typed runs draw type-correct negatives from each
-        relation's dst node type. Keyword overrides exist for eval, whose
-        protocol differs from the training job's (single construction
-        site so the pool rules can never diverge)."""
-        job = self.job
-        neg_pools = None
-        etype_of_edge = None
-        schema = None
-        if self.hetero:
-            schema = self.schema
-            etype_of_edge = self.typed.etype_of_edge
-            neg_pools = [self.typed.type2node[schema.dst_ntype_id(r)]
-                         for r in range(schema.num_etypes)]
-        return EdgeBatchSampler(
-            node_sampler, self.e_src, self.e_dst, owned_eids,
-            batch_edges or self.cfg.batch_size,
-            job.num_negs if num_negs is None else num_negs,
-            neg_mode=neg_mode or job.neg_mode,
-            etype_of_edge=etype_of_edge, schema=schema,
-            neg_pools=neg_pools,
-            exclude_batch_positives=(job.neg_exclude if exclude is None
-                                     else exclude),
-            seed=seed)
 
     # ------------------------------------------------------------------
     def _lp_scores(self, params, batch, cfg: Optional[GNNConfig] = None):
@@ -356,41 +249,27 @@ class DistGNNTrainer:
             return jnp.stack([jnp.asarray(x) for x in xs])
         return jax.tree.map(stack_leaf, *batches)
 
-    def _device_batch(self, mb) -> dict:
-        blocks = [dict(edge_src=b.edge_src, edge_dst=b.edge_dst,
-                       edge_mask=b.edge_mask, edge_types=b.edge_types)
-                  for b in mb.blocks]
-        if self.task == "link_prediction":
-            return dict(
-                input_feats=mb.input_feats,
-                seed_mask=mb.seed_mask,
-                pos_u=mb.pos_u, pos_v=mb.pos_v, neg_v=mb.neg_v,
-                pair_mask=mb.pair_mask, edge_etypes=mb.edge_etypes,
-                blocks=blocks,
-            )
-        return dict(
-            input_feats=mb.input_feats,
-            labels=mb.labels,
-            seed_mask=mb.seed_mask,
-            blocks=blocks,
-        )
-
     # ------------------------------------------------------------------
     def train_epoch(self, epoch: int) -> dict:
-        iters = [p.epoch(epoch) for p in self.pipelines]
+        iters = [ld.epoch(epoch) for ld in self.loaders]
         t0 = time.perf_counter()
         losses, accs = [], []
         for _ in range(self.batches_per_epoch):
-            batches = [self._device_batch(next(it)) for it in iters]
+            batches = [next(it).model_input() for it in iters]
             self.params, self.opt, loss, acc = self._step(
                 self.params, self.opt, self._stack(batches))
             losses.append(float(loss))
             accs.append(float(acc))
-        # drain finite iterators (sync / non-non_stop modes)
-        if not (self.pipelines[0].non_stop and not self.job.sync):
-            for it in iters:
-                for _ in it:
-                    pass
+        # drain every iterator to ITS epoch boundary. With equal
+        # per-trainer batch counts (node tasks, homogeneous LP) this pulls
+        # nothing in non-stop mode and just exhausts finite pipelines; on
+        # the typed LP path per-etype tail-dropping can leave a trainer a
+        # few surplus batches, and abandoning those mid-epoch would poison
+        # the next epoch with stale-labeled batches (the pre-api trainer
+        # silently did exactly that) or force a pipeline rebuild per epoch
+        for it in iters:
+            for _ in it:
+                pass
         dt = time.perf_counter() - t0
         out = {"epoch": epoch, "loss": float(np.mean(losses)),
                "acc": float(np.mean(accs)), "time_s": dt,
@@ -412,29 +291,27 @@ class DistGNNTrainer:
         against only the training K would saturate it) — and therefore
         its own endpoint capacity / jitted rank program, cached per
         (B, K). Exclusion is off regardless of ``neg_exclude``: the eval
-        candidates must not depend on ANY training setting. The trainers'
-        samplers are owned by their pipeline threads, so eval builds
-        dedicated ones. As with ``evaluate``, eval feature pulls are
-        charged to the shared transport (sampling RPCs are not) — read
+        candidates must not depend on ANY training setting. The whole
+        protocol is an ``EdgeDataLoader(mode="eval")`` over every edge:
+        deterministic schedule, ad-hoc sampler coordinates, dedicated
+        sampler (the trainers' samplers are owned by their pipeline
+        threads). As with ``evaluate``, eval feature pulls are charged to
+        the shared transport (sampling RPCs are not) — read
         ``sampling_stats()`` before evaluating for pure training traffic.
         """
         assert self.task == "link_prediction", "trainer is not an LP job"
         B = batch_edges or min(self.cfg.batch_size, 16)
         K = num_negs or 49
-        book = self.hp.book
-        node_bs = EdgeBatchSampler.required_node_batch(B, K, "uniform")
-        eval_cfg = dataclasses.replace(self.node_cfg, batch_size=node_bs)
-        node_s = DistributedSampler(
-            book, self.hp.partitions, eval_cfg.fanouts,
-            eval_cfg.batch_size, machine=0, seed=self.job.seed + 998,
-            schema=self.schema if self.hetero else None,
-            ntype_of_node=self.typed.ntype_of_node if self.hetero else None)
-        all_eids = np.arange(int(book.edge_offsets[-1]), dtype=np.int64)
-        es = self._build_edge_sampler(node_s, all_eids,
-                                      seed=self.job.seed + seed,
-                                      batch_edges=B, num_negs=K,
-                                      neg_mode="uniform", exclude=False)
-        client = self.store.client(0)
+        eval_cfg = dataclasses.replace(
+            self.node_cfg,
+            batch_size=EdgeBatchSampler.required_node_batch(B, K, "uniform"))
+        g0 = self.graph.trainer_view(0)
+        all_eids = np.arange(g0.num_edges(), dtype=np.int64)
+        loader = EdgeDataLoader(
+            g0, all_eids, eval_cfg.fanouts, batch_size=B, num_negs=K,
+            neg_mode="uniform", neg_exclude=False, mode="eval",
+            sampler_seed=self.job.seed + 998,
+            edge_seed=self.job.seed + seed)
         if self._eval_ranks_fn is None or self._eval_ranks_key != (B, K):
             @jax.jit
             def eval_ranks(params, batch):
@@ -442,24 +319,12 @@ class DistGNNTrainer:
                 return lp_ranks(pos, neg)
             self._eval_ranks_fn = eval_ranks
             self._eval_ranks_key = (B, K)
-        rng = np.random.default_rng(self.job.seed + seed)
         ranks: List[np.ndarray] = []
-        sched = es.schedule(rng, 0)
-        for _ in range(num_batches):
-            try:
-                _e, b, et, eids = next(sched)
-            except StopIteration:
-                break
-            emb = es.sample_edges(eids, etype=et, batch_index=b)
-            if self.hetero:
-                emb.input_feats = client.pull_typed(
-                    "feat", emb.input_gids, self.typed,
-                    ntypes=emb.input_ntypes)
-            else:
-                emb.input_feats = client.pull("feat", emb.input_gids)
-            r = np.asarray(self._eval_ranks_fn(self.params,
-                                               self._device_batch(emb)))
-            ranks.append(r[emb.pair_mask])
+        with loader:
+            for batch in itertools.islice(loader, num_batches):
+                r = np.asarray(self._eval_ranks_fn(self.params,
+                                                   batch.model_input()))
+                ranks.append(r[batch.pair_mask])
         if not ranks:   # fewer owned edges than one batch: degenerate eval
             return {"mrr": float("nan"), "num_edges": 0,
                     **{f"hits@{k}": float("nan") for k in (1, 3, 10)}}
@@ -470,39 +335,31 @@ class DistGNNTrainer:
         return out
 
     def evaluate(self, nids_old: np.ndarray, max_batches: int = 50) -> float:
-        book = self.hp.book
-        nids = book.old2new_node[np.asarray(nids_old)]
-        # dedicated sampler: the trainers' samplers are owned by their
-        # (possibly still running, non_stop) pipeline sampling threads —
-        # sharing one would race the RNG and stats
-        sampler = DistributedSampler(
-            book, self.hp.partitions, self.cfg.fanouts, self.cfg.batch_size,
-            machine=0, seed=self.job.seed + 999,
-            schema=self.schema if self.hetero else None,
-            ntype_of_node=self.typed.ntype_of_node if self.hetero else None)
-        client = self.store.client(0)
+        """Node-classification accuracy over ``nids_old`` through a
+        ``NodeDataLoader(mode="eval")``: sequential batches, dedicated
+        sampler (the trainers' samplers are owned by their possibly still
+        running non_stop pipeline threads — sharing one would race the
+        RNG and stats)."""
+        nids = self.graph.to_new_nids(np.asarray(nids_old))
+        g0 = self.graph.trainer_view(0)
+        loader = NodeDataLoader(
+            g0, nids, self.cfg.fanouts, batch_size=self.cfg.batch_size,
+            labels=self.labels_new[nids], mode="eval",
+            sampler_seed=self.job.seed + 999)
         accs = []
-        bs = self.cfg.batch_size
-        for b in range(min(max_batches, len(nids) // bs)):
-            chunk = nids[b * bs:(b + 1) * bs]
-            mb = sampler.sample(chunk, labels=self.labels_new[chunk],
-                                batch_index=b)
-            if self.hetero:
-                mb.input_feats = client.pull_typed("feat", mb.input_gids,
-                                                   self.typed,
-                                                   ntypes=mb.input_ntypes)
-            else:
-                mb.input_feats = client.pull("feat", mb.input_gids)
-            logits = apply_gnn(self.cfg, self.params, self._device_batch(mb),
-                               etype_id=self.schema.etype_id
-                               if self.hetero else None)
-            accs.append(float(nc_accuracy(logits, jnp.asarray(mb.labels),
-                                          jnp.asarray(mb.seed_mask))))
+        with loader:
+            for batch in itertools.islice(loader, max_batches):
+                logits = apply_gnn(self.cfg, self.params, batch.model_input(),
+                                   etype_id=self.schema.etype_id
+                                   if self.hetero else None)
+                accs.append(float(nc_accuracy(logits,
+                                              jnp.asarray(batch.labels),
+                                              jnp.asarray(batch.seed_mask))))
         return float(np.mean(accs)) if accs else float("nan")
 
     def stop(self):
-        for p in self.pipelines:
-            p.stop()
+        for ld in self.loaders:
+            ld.close()
 
     def sampling_stats(self) -> dict:
         remote = sum(s.stats.seeds_remote for s in self.samplers)

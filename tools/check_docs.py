@@ -13,15 +13,25 @@ Checks README.md / DESIGN.md / CHANGES.md for:
      numbers (e.g. "§5.4" in DESIGN.md means the paper's §5.4);
   3. **backticked file references** — a token like ``core/sampler/mfg.py``
      must resolve against the repo root or a source root (src, src/repro,
-     the docs refer to modules by their import-ish path).
+     the docs refer to modules by their import-ish path);
+  4. **the DESIGN.md §8 API table** — every backticked ``repro.*`` dotted
+     name in that section must exist: resolved by real import when the
+     third-party deps are installed, by a stdlib AST scan of the module
+     file otherwise (the docs-check CI job runs without numpy/jax);
+  5. **the API boundary** — ``MinibatchPipeline`` / ``EdgeMinibatchPipeline``
+     may only be CONSTRUCTED inside ``src/repro/api/`` (and their defining
+     module); everything else, examples included, must go through the
+     ``repro.api`` loaders. Tests and benchmarks are exempt.
 
 Exit code 1 with one line per dangling reference; 0 when clean.
 """
 from __future__ import annotations
 
+import ast
 import re
 import sys
 from pathlib import Path
+from typing import Optional
 
 DOCS = ["README.md", "DESIGN.md", "CHANGES.md"]
 SEARCH_ROOTS = ["", "src", "src/repro", "tests", "benchmarks"]
@@ -92,6 +102,128 @@ def check_file(root: Path, name: str, design_sections: set[str]
     return errors
 
 
+# ---------------------------------------------------------------------------
+# DESIGN.md §8 API table: every `repro.*` name must exist
+# ---------------------------------------------------------------------------
+
+API_NAME_RE = re.compile(r"`(repro(?:\.\w+)+)`")
+
+
+def _ast_exported_names(py: Path) -> set[str]:
+    """Top-level names a module defines, importable-deps-free: defs,
+    classes, assignment targets, import-from aliases, and __all__ literal
+    entries (covers lazily-exported names behind module __getattr__)."""
+    tree = ast.parse(py.read_text(encoding="utf-8"))
+    names: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for a in node.names:
+                names.add((a.asname or a.name).split(".")[0])
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    names.add(tgt.id)
+                    if tgt.id == "__all__":
+                        try:
+                            names.update(ast.literal_eval(node.value))
+                        except ValueError:
+                            pass
+    return names
+
+
+def _resolve_api_name(root: Path, dotted: str) -> Optional[str]:
+    """None if ``dotted`` (e.g. repro.api.DistGraph.node_split) resolves,
+    else an error string. Tries a real import first; falls back to an AST
+    scan of the module file when third-party deps are unavailable."""
+    parts = dotted.split(".")
+    # longest module prefix that is a file/package under src/
+    mod_end = len(parts)
+    while mod_end > 0:
+        p = root / "src" / Path(*parts[:mod_end])
+        if (p / "__init__.py").exists() or p.with_suffix(".py").exists():
+            break
+        mod_end -= 1
+    if mod_end == 0:
+        return f"module for {dotted!r} not found under src/"
+    attrs = parts[mod_end:]
+    module = ".".join(parts[:mod_end])
+    sys.path.insert(0, str(root / "src"))
+    try:
+        import importlib
+        obj = importlib.import_module(module)
+        for a in attrs:
+            obj = getattr(obj, a)
+        return None
+    except AttributeError:
+        return f"{module} has no attribute {'.'.join(attrs)}"
+    except ImportError:
+        # deps missing (the no-deps docs-check CI job): AST fallback on
+        # the first attribute only (methods of a class need the import)
+        p = root / "src" / Path(*parts[:mod_end])
+        py = (p / "__init__.py") if (p / "__init__.py").exists() \
+            else p.with_suffix(".py")
+        if not attrs or attrs[0] in _ast_exported_names(py):
+            return None
+        return f"{module} does not define {attrs[0]} (AST scan)"
+    finally:
+        sys.path.pop(0)
+
+
+def check_api_table(root: Path) -> list[str]:
+    """Verify every `repro.*` dotted name in DESIGN.md §8 exists."""
+    design = root / "DESIGN.md"
+    if not design.exists():
+        return []
+    text = design.read_text(encoding="utf-8")
+    m = re.search(r"^## §8 .*$", text, re.MULTILINE)
+    if m is None:
+        return []
+    section = text[m.end():]
+    nxt = re.search(r"^## ", section, re.MULTILINE)
+    if nxt:
+        section = section[:nxt.start()]
+    errors = []
+    for name in sorted({m.group(1) for m in API_NAME_RE.finditer(section)}):
+        err = _resolve_api_name(root, name)
+        if err:
+            errors.append(f"DESIGN.md: §8 API table name `{name}`: {err}")
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# API boundary: pipelines are constructed only in src/repro/api/
+# ---------------------------------------------------------------------------
+
+PIPELINE_CTOR_RE = re.compile(
+    r"(?<!class )\b(?:Edge)?MinibatchPipeline\s*\(")
+BOUNDARY_ALLOWED = ("src/repro/api/", "src/repro/core/pipeline/minibatch.py")
+
+
+def check_api_boundary(root: Path) -> list[str]:
+    """`DistGNNTrainer`, launch/, and the examples must consume the
+    repro.api loaders — no direct pipeline construction (DESIGN.md §8)."""
+    errors = []
+    for base in ("src", "examples"):
+        d = root / base
+        if not d.exists():
+            continue
+        for py in sorted(d.rglob("*.py")):
+            rel = py.relative_to(root).as_posix()
+            if any(rel.startswith(a) for a in BOUNDARY_ALLOWED):
+                continue
+            for i, line in enumerate(
+                    py.read_text(encoding="utf-8").splitlines(), 1):
+                if PIPELINE_CTOR_RE.search(line):
+                    errors.append(
+                        f"{rel}:{i}: direct pipeline construction outside "
+                        f"repro.api — use NodeDataLoader/EdgeDataLoader "
+                        f"(DESIGN.md §8)")
+    return errors
+
+
 def check_all(root: Path) -> list[str]:
     design = root / "DESIGN.md"
     sections = (set(SECTION_RE.findall(design.read_text(encoding="utf-8")))
@@ -99,6 +231,8 @@ def check_all(root: Path) -> list[str]:
     errors = []
     for name in DOCS:
         errors.extend(check_file(root, name, sections))
+    errors.extend(check_api_table(root))
+    errors.extend(check_api_boundary(root))
     return errors
 
 
