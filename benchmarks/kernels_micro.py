@@ -1,13 +1,27 @@
-"""Kernel microbenchmarks.
+"""Kernel + device-staging microbenchmarks: emits ``BENCH_kernels.json``
+so the perf trajectory accumulates in CI.
 
-The Pallas kernels target TPU; on this CPU host ``interpret=True`` is an
-emulator (not a performance path), so the timed numbers are for the jnp
-reference implementations (what actually runs on CPU) — the Pallas path is
-timed once at small size purely to prove it executes. Roofline numbers for
-the kernels on TPU come from the dry-run tables instead.
+Four measurements:
+
+  * **packed vs per-array staging** — one realistic mini-batch host tree
+    (feats + seeds + labels + 2 blocks x 4 arrays) shipped to the device
+    by the packed single-``device_put`` path (DESIGN.md §9) vs the legacy
+    per-array loop, plus a byte-identity cross-check;
+  * **fused vs unfused aggregation** — ``fused_gather_aggregate`` /
+    ``fused_edge_softmax_aggregate`` against the two/three-step
+    compositions they replaced (jnp ref path — what actually runs on this
+    CPU host; the Pallas path is interpret-emulated, so it is executed at
+    small size purely for the parity proof, not timed for speed);
+  * **fused sparse-Adam** — the ``DistEmbedding`` row-sparse update, ref
+    (in-place NumPy) timing plus a Pallas-vs-ref bitwise cross-check;
+  * the legacy per-kernel jnp rows (segment_sum / gather / edge_softmax).
+
+Run:  PYTHONPATH=src python -m benchmarks.kernels_micro [--smoke]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -15,7 +29,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from .common import csv_line
-from repro.kernels import edge_softmax, gather_rows, segment_sum
+from repro.kernels import (edge_softmax, fused_edge_softmax_aggregate,
+                           fused_edge_softmax_aggregate_ref,
+                           fused_gather_aggregate, fused_gather_aggregate_ref,
+                           gather_rows, segment_sum, sparse_adam_apply)
+from repro.kernels.pack import device_stage, flatten_tree
 
 
 def _bench(fn, *args, iters=20):
@@ -28,34 +46,211 @@ def _bench(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run():
+def _batch_tree(rng, n_in=1200, batch=32, e=1600, f=100, layers=2) -> dict:
+    """A host tree shaped like a node mini-batch's device-prefetch input."""
+    blk = lambda: dict(                                      # noqa: E731
+        edge_src=rng.integers(0, n_in, e).astype(np.int64),
+        edge_dst=rng.integers(0, batch * 10, e).astype(np.int64),
+        edge_mask=np.ones(e, bool),
+        edge_types=np.zeros(e, np.int32))
+    return dict(input_feats=rng.standard_normal((n_in, f)).astype(np.float32),
+                seeds=rng.integers(0, n_in, batch).astype(np.int64),
+                seed_mask=np.ones(batch, bool),
+                labels=rng.integers(0, 16, batch).astype(np.int64),
+                blocks=[blk() for _ in range(layers)])
+
+
+def staging_micro(smoke: bool = False) -> dict:
+    """Packed one-shot staging vs per-array device_put on one batch tree.
+    Timed to the point the PIPELINE stage blocks on (transfer complete);
+    the packed path's jitted unpack runs lazily in the consumer, so it is
+    timed separately."""
     rng = np.random.default_rng(0)
-    e, f, n = 16384, 128, 4096
+    tree = _batch_tree(rng, n_in=300 if smoke else 1200,
+                       e=400 if smoke else 1600)
+    flat, _ = flatten_tree(tree)
+    iters = 10 if smoke else 50
+
+    def stage(packed):
+        out = device_stage(tree, packed=packed)
+        jax.block_until_ready(out.buffers if packed
+                              else jax.tree.leaves(out))
+        return out
+
+    t_per_array = _bench(lambda: stage(False), iters=iters)
+    t_packed = _bench(lambda: stage(True), iters=iters)
+    t_unpack = _bench(lambda: jax.tree.leaves(stage(True).unpack()),
+                      iters=iters) - t_packed
+
+    # byte identity between the two staging paths
+    a = stage(True).unpack()
+    b = stage(False)
+    fa, _ = flatten_tree(jax.tree.map(np.asarray, a))
+    fb, _ = flatten_tree(jax.tree.map(np.asarray, b))
+    identical = (set(fa) == set(fb)
+                 and all(fa[k].dtype == fb[k].dtype
+                         and np.array_equal(fa[k], fb[k]) for k in fa))
+    if not identical:
+        raise AssertionError("packed staging changed the batch bytes")
+
+    nbytes = sum(v.nbytes for v in flat.values())
+    speed = t_per_array / max(t_packed, 1e-9)
+    csv_line("kernels/staging_per_array", t_per_array,
+             f"arrays={len(flat)};bytes={nbytes}")
+    csv_line("kernels/staging_packed", t_packed,
+             f"speedup={speed:.2f}x;device_puts=1")
+    csv_line("kernels/staging_unpack", max(t_unpack, 0.0),
+             "consumer-side;jitted static slices")
+    return dict(num_arrays=len(flat), total_bytes=nbytes,
+                per_array_us=t_per_array, packed_us=t_packed,
+                unpack_us=max(t_unpack, 0.0), speedup=speed,
+                byte_identical=True)
+
+
+def fused_micro(smoke: bool = False) -> dict:
+    """Fused layer tails vs the unfused compositions they replaced (jnp
+    path, jitted either way), plus the Pallas interpret parity proof."""
+    rng = np.random.default_rng(1)
+    e, f, n, v = (2048, 32, 512, 1024) if smoke else (16384, 128, 4096, 8192)
+    h = jnp.asarray(rng.standard_normal((v, f)), jnp.float32)
+    src = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    mask = jnp.asarray(rng.random(e) > 0.2)
+
+    unfused = jax.jit(lambda h, s, d, m: segment_sum(h[s], d, m, n,
+                                                     impl="ref"))
+    fused = jax.jit(lambda h, s, d, m: fused_gather_aggregate(
+        h, s, d, m, n, impl="ref"))
+    t_unf = _bench(unfused, h, src, dst, mask)
+    t_fus = _bench(fused, h, src, dst, mask)
+    csv_line("kernels/gather_aggregate_unfused", t_unf, f"E={e};F={f};N={n}")
+    csv_line("kernels/gather_aggregate_fused_ref", t_fus,
+             f"speedup={t_unf / max(t_fus, 1e-9):.2f}x")
+
+    heads, dh = 4, max(f // 4, 1)
+    hp = jnp.asarray(rng.standard_normal((v, heads, dh)), jnp.float32)
+    sc = jnp.asarray(rng.standard_normal((e, heads)), jnp.float32)
+
+    def unfused_att(hp, sc, s, d, m):
+        alpha = edge_softmax(sc, d, m, n, impl="ref")
+        msg = (hp[s] * alpha[:, :, None]).reshape(e, -1)
+        return segment_sum(msg, d, m, n, impl="ref")
+
+    fused_att = jax.jit(lambda hp, sc, s, d, m: fused_edge_softmax_aggregate(
+        hp, sc, s, d, m, n, impl="ref"))
+    t_unf_a = _bench(jax.jit(unfused_att), hp, sc, src, dst, mask)
+    t_fus_a = _bench(fused_att, hp, sc, src, dst, mask)
+    csv_line("kernels/edge_softmax_aggregate_unfused", t_unf_a,
+             f"E={e};H={heads};dh={dh};N={n}")
+    csv_line("kernels/edge_softmax_aggregate_fused_ref", t_fus_a,
+             f"speedup={t_unf_a / max(t_fus_a, 1e-9):.2f}x")
+
+    # Pallas interpret parity proof (emulated, small, correctness-only)
+    k = 256
+    pf = fused_gather_aggregate(h[:k], src[:k] % k, dst[:k] % 64, mask[:k],
+                                64, impl="pallas")
+    rf = fused_gather_aggregate_ref(h[:k], src[:k] % k, dst[:k] % 64,
+                                    mask[:k], 64)
+    pa = fused_edge_softmax_aggregate(hp[:k], sc[:k], src[:k] % k,
+                                      dst[:k] % 64, mask[:k], 64,
+                                      impl="pallas")
+    ra = fused_edge_softmax_aggregate_ref(hp[:k], sc[:k], src[:k] % k,
+                                          dst[:k] % 64, mask[:k], 64)
+    ok = (np.allclose(pf, rf, atol=1e-5)
+          and np.allclose(pa, ra, atol=1e-4))
+    if not ok:
+        raise AssertionError("pallas/ref fused-kernel parity failed")
+    csv_line("kernels/fused_pallas_interpret_parity", 1.0, "emulated;ok")
+    return dict(gather_aggregate=dict(unfused_us=t_unf, fused_ref_us=t_fus),
+                edge_softmax_aggregate=dict(unfused_us=t_unf_a,
+                                            fused_ref_us=t_fus_a),
+                pallas_parity=True)
+
+
+def sparse_adam_micro(smoke: bool = False) -> dict:
+    """The DistEmbedding row-sparse Adam: ref timing + a Pallas bitwise
+    cross-check (the byte-identity contract the oracle tests pin)."""
+    rng = np.random.default_rng(2)
+    n, d, r = (512, 16, 64) if smoke else (16384, 64, 1024)
+    kw = dict(beta1=0.9, beta2=0.999, lr=1e-2, eps=1e-8)
+
+    def world():
+        return (rng.standard_normal((n, d)).astype(np.float32),
+                np.zeros((n, d), np.float32), np.zeros((n, d), np.float32),
+                np.zeros(n, np.int64))
+
+    w, m, v, t = world()
+    rows = np.unique(rng.integers(0, n, r))
+    g = rng.standard_normal((len(rows), d)).astype(np.float32)
+    iters = 5 if smoke else 50
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        sparse_adam_apply(w, m, v, rows, g, t, impl="ref", **kw)
+    t_ref = (time.perf_counter() - t0) / iters * 1e6
+    csv_line("kernels/sparse_adam_ref", t_ref, f"N={n};D={d};R={len(rows)}")
+
+    # bitwise: pallas (interpret) vs ref from the same start state
+    w1, m1, v1, t1 = world()
+    w2, m2, v2, t2 = w1.copy(), m1.copy(), v1.copy(), t1.copy()
+    for _ in range(3):
+        rs = np.unique(rng.integers(0, n, min(r, 32)))
+        gs = rng.standard_normal((len(rs), d)).astype(np.float32)
+        sparse_adam_apply(w1, m1, v1, rs, gs, t1, impl="ref", **kw)
+        sparse_adam_apply(w2, m2, v2, rs, gs, t2, impl="pallas", **kw)
+    bitwise = (np.array_equal(w1, w2) and np.array_equal(m1, m2)
+               and np.array_equal(v1, v2))
+    if not bitwise:
+        raise AssertionError("sparse-Adam pallas/ref bitwise parity failed")
+    csv_line("kernels/sparse_adam_pallas_bitwise", 1.0, "emulated;bit-exact")
+    return dict(n=n, d=d, r=int(len(rows)), ref_us=t_ref, pallas_bitwise=True)
+
+
+def base_kernels(smoke: bool = False) -> dict:
+    """The original per-kernel jnp rows (kept for trajectory continuity)."""
+    rng = np.random.default_rng(0)
+    e, f, n = (2048, 32, 512) if smoke else (16384, 128, 4096)
     msg = jnp.asarray(rng.standard_normal((e, f)), jnp.float32)
     dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
     mask = jnp.asarray(rng.random(e) > 0.2)
     seg = jax.jit(lambda m, d, k: segment_sum(m, d, k, n, impl="ref"))
-    csv_line("kernels/segment_sum_ref", _bench(seg, msg, dst, mask),
-             f"E={e};F={f};N={n}")
+    t_seg = _bench(seg, msg, dst, mask)
+    csv_line("kernels/segment_sum_ref", t_seg, f"E={e};F={f};N={n}")
 
     table = jnp.asarray(rng.standard_normal((65536, 128)), jnp.float32)
     idx = jnp.asarray(rng.integers(0, 65536, 8192), jnp.int32)
     gat = jax.jit(lambda t, i: gather_rows(t, i, impl="ref"))
-    csv_line("kernels/gather_ref", _bench(gat, table, idx), "V=65536;F=128")
+    t_gat = _bench(gat, table, idx)
+    csv_line("kernels/gather_ref", t_gat, "V=65536;F=128")
 
     sc = jnp.asarray(rng.standard_normal((e, 4)), jnp.float32)
     es = jax.jit(lambda s, d, m: edge_softmax(s, d, m, n, impl="ref"))
-    csv_line("kernels/edge_softmax_ref", _bench(es, sc, dst, mask),
-             f"E={e};H=4;N={n}")
+    t_es = _bench(es, sc, dst, mask)
+    csv_line("kernels/edge_softmax_ref", t_es, f"E={e};H=4;N={n}")
+    return dict(segment_sum_us=t_seg, gather_us=t_gat, edge_softmax_us=t_es)
 
-    # prove the Pallas path executes (interpret mode, small size)
-    t = _bench(lambda m, d, k: segment_sum(m[:256], d[:256], k[:256], 128,
-                                           impl="pallas"), msg, dst, mask,
-               iters=3)
-    csv_line("kernels/segment_sum_pallas_interpret", t,
-             "emulated;correctness-only")
-    return True
+
+def run(out_path: str = "BENCH_kernels.json", smoke: bool = False) -> dict:
+    result = {
+        "config": {"smoke": smoke, "backend": jax.default_backend()},
+        "staging": staging_micro(smoke),
+        "fused": fused_micro(smoke),
+        "sparse_adam": sparse_adam_micro(smoke),
+        "base": base_kernels(smoke),
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[kernels_micro] wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(prog="benchmarks.kernels_micro")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI: same measurements, tiny run")
+    args = ap.parse_args()
+    run(out_path=args.out, smoke=args.smoke)
 
 
 if __name__ == "__main__":
-    run()
+    main()

@@ -77,11 +77,26 @@ class NodeBatch:
     epoch = property(lambda self: self.minibatch.epoch)
     batch_index = property(lambda self: self.minibatch.batch_index)
 
-    def model_input(self) -> dict:
-        """The dict the jitted node-classification step consumes."""
+    _model_keys = ("input_feats", "labels", "seed_mask", "blocks")
+
+    def model_input(self, packed: bool = False):
+        """The dict the jitted step consumes.  ``packed=True`` (requires
+        ``device_prefetch=True`` with packed staging) returns the staged
+        :class:`~repro.kernels.pack.PackedBatch` itself — one contiguous
+        device buffer per dtype, suitable for ``jax.jit`` donation
+        (DESIGN.md §9) — instead of the unpacked per-array dict."""
+        if packed:
+            from ..kernels.pack import PackedBatch
+            if not isinstance(self.device, PackedBatch):
+                raise ValueError(
+                    "packed model_input needs a loader built with "
+                    "device_prefetch=True and packed_staging=True")
+            return self.device
         if self.device is not None:
-            return {k: self.device[k]
-                    for k in ("input_feats", "labels", "seed_mask", "blocks")}
+            return {k: self.device[k] for k in self._model_keys}
+        return self._host_input()
+
+    def _host_input(self) -> dict:
         mb = self.minibatch
         return dict(input_feats=mb.input_feats, labels=mb.labels,
                     seed_mask=mb.seed_mask, blocks=_model_blocks(mb))
@@ -108,12 +123,10 @@ class EdgeBatch(NodeBatch):
     pos_eids = property(lambda self: self.minibatch.pos_eids)
     etype = property(lambda self: self.minibatch.etype)
 
-    def model_input(self) -> dict:
-        """The dict the jitted link-prediction step consumes."""
-        if self.device is not None:
-            return {k: self.device[k]
-                    for k in ("input_feats", "seed_mask", "pos_u", "pos_v",
-                              "neg_v", "pair_mask", "edge_etypes", "blocks")}
+    _model_keys = ("input_feats", "seed_mask", "pos_u", "pos_v", "neg_v",
+                   "pair_mask", "edge_etypes", "blocks")
+
+    def _host_input(self) -> dict:
         emb = self.minibatch
         return dict(input_feats=emb.input_feats, seed_mask=emb.seed_mask,
                     pos_u=emb.pos_u, pos_v=emb.pos_v, neg_v=emb.neg_v,
@@ -252,6 +265,7 @@ class NodeDataLoader(_BaseLoader):
                  batch_size: int, labels: Optional[np.ndarray] = None,
                  shuffle: bool = True, sample_workers: int = 1,
                  cache=None, device_prefetch: bool = False,
+                 packed_staging: bool = True,
                  sync: bool = False, non_stop: bool = True,
                  depths: Optional[dict] = None, seed: int = 0,
                  sampler_seed: Optional[int] = None, mode: str = "train"):
@@ -273,8 +287,9 @@ class NodeDataLoader(_BaseLoader):
             self.pipeline = MinibatchPipeline(
                 self.sampler, self._client, g.feat_name, self.nids,
                 labels=labels, sync=sync, non_stop=non_stop, depths=depths,
-                to_device=device_prefetch, seed=seed, typed=g.typed,
-                cache=cache, sample_workers=sample_workers, shuffle=shuffle)
+                to_device=device_prefetch, packed=packed_staging, seed=seed,
+                typed=g.typed, cache=cache, sample_workers=sample_workers,
+                shuffle=shuffle)
 
     def __len__(self) -> int:
         if self.pipeline is not None:
@@ -313,7 +328,8 @@ class EdgeDataLoader(_BaseLoader):
                  batch_size: int, num_negs: int = 16,
                  neg_mode: str = "uniform", neg_exclude: bool = False,
                  sample_workers: int = 1, cache=None,
-                 device_prefetch: bool = False, sync: bool = False,
+                 device_prefetch: bool = False,
+                 packed_staging: bool = True, sync: bool = False,
                  non_stop: bool = True, depths: Optional[dict] = None,
                  seed: int = 0, sampler_seed: Optional[int] = None,
                  edge_seed: Optional[int] = None, mode: str = "train"):
@@ -348,7 +364,7 @@ class EdgeDataLoader(_BaseLoader):
             self.pipeline = EdgeMinibatchPipeline(
                 self.edge_sampler, self._client, g.feat_name, sync=sync,
                 non_stop=non_stop, depths=depths, to_device=device_prefetch,
-                seed=seed, typed=g.typed, cache=cache,
+                packed=packed_staging, seed=seed, typed=g.typed, cache=cache,
                 sample_workers=sample_workers)
 
     def __len__(self) -> int:

@@ -13,6 +13,7 @@ from typing import Optional
 
 import numpy as np
 
+from ...kernels import sparse_adam_apply
 from .store import DistKVStore, KVClient
 
 
@@ -37,7 +38,7 @@ class DistEmbedding:
     def __init__(self, store: DistKVStore, name: str, num: int, dim: int,
                  policy_name: str, *, seed: int = 0,
                  optim: Optional[SparseAdamConfig] = None,
-                 dtype=np.float32):
+                 dtype=np.float32, impl: str = "auto"):
         pol = store.policies[policy_name]
         assert pol.total == num, (pol.total, num)
         self.store = store
@@ -46,6 +47,10 @@ class DistEmbedding:
         self.dim = dim
         self.policy_name = policy_name
         self.optim = optim or SparseAdamConfig()
+        # sparse-Adam implementation at the owners: "ref" = in-place NumPy,
+        # "pallas" = the fused gather->update->scatter kernel ("auto" picks
+        # pallas on TPU).  Both are bitwise-identical to the dense oracle.
+        self.impl = impl
         rng = np.random.default_rng(seed)
         scale = 1.0 / np.sqrt(dim)
         # mutable=True: rows change under sparse-Adam pushes, so trainer
@@ -98,13 +103,12 @@ class DistEmbedding:
             mm = srv.local_view(self.name + "__m")
             vv = srv.local_view(self.name + "__v")
             w = srv.local_view(self.name)
-            t[rows] += 1
-            tr = t[rows].astype(np.float32)[:, None]
-            mm[rows] = cfg.beta1 * mm[rows] + (1 - cfg.beta1) * gm
-            vv[rows] = cfg.beta2 * vv[rows] + (1 - cfg.beta2) * gm * gm
-            mhat = mm[rows] / (1 - cfg.beta1 ** tr)
-            vhat = vv[rows] / (1 - cfg.beta2 ** tr)
-            w[rows] -= (cfg.lr * mhat / (np.sqrt(vhat) + cfg.eps)).astype(w.dtype)
+            # fused gather -> Adam -> scatter on the owner's local views
+            # (kernels.sparse_adam; bitwise contract with the old inline
+            # NumPy update either impl)
+            sparse_adam_apply(w, mm, vv, rows, gm, t, beta1=cfg.beta1,
+                              beta2=cfg.beta2, lr=cfg.lr, eps=cfg.eps,
+                              impl=self.impl)
             nbytes = gm.nbytes
             if p == getattr(client, "machine", p):
                 store.transport.charge_local(nbytes)

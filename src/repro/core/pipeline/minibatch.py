@@ -24,9 +24,9 @@ from __future__ import annotations
 import threading
 from typing import Callable, Iterator, Optional
 
-import jax
 import numpy as np
 
+from ...kernels.pack import device_stage
 from ..kvstore.store import KVClient
 from ..sampler.dispatch import DistributedSampler
 from ..sampler.edge_batch import EdgeBatchSampler, EdgeMiniBatch
@@ -35,13 +35,11 @@ from ..sampler.prng import STREAM_SCHEDULE, batch_rng
 from .async_pipeline import AsyncPipeline, Stage
 
 
-def _device_blocks(mb) -> list:
-    """Ship a mini-batch's padded block arrays to the accelerator (shared
-    by the node and edge device-prefetch stages)."""
-    return [dict(edge_src=jax.device_put(b.edge_src),
-                 edge_dst=jax.device_put(b.edge_dst),
-                 edge_mask=jax.device_put(b.edge_mask),
-                 edge_types=jax.device_put(b.edge_types))
+def _host_blocks(mb) -> list:
+    """A mini-batch's padded block arrays as a plain host tree (shared by
+    the node and edge device-prefetch stages)."""
+    return [dict(edge_src=b.edge_src, edge_dst=b.edge_dst,
+                 edge_mask=b.edge_mask, edge_types=b.edge_types)
             for b in mb.blocks]
 
 
@@ -65,8 +63,9 @@ class MinibatchPipeline:
                  batch_size: Optional[int] = None,
                  depths: dict | None = None,
                  sync: bool = False, non_stop: bool = True,
-                 to_device: bool = True, seed: int = 0, typed=None,
-                 cache=None, sample_workers: int = 1, shuffle: bool = True):
+                 to_device: bool = True, packed: bool = True, seed: int = 0,
+                 typed=None, cache=None, sample_workers: int = 1,
+                 shuffle: bool = True):
         self.sampler = sampler
         self.kv_client = kv_client
         self.feat_name = feat_name
@@ -89,6 +88,10 @@ class MinibatchPipeline:
         self.sync = sync
         self.non_stop = non_stop
         self.to_device = to_device
+        # packed=True: the device-prefetch stage flattens the whole batch
+        # into one contiguous host buffer per dtype and issues a SINGLE
+        # jax.device_put (DESIGN.md §9); False = legacy per-array puts
+        self.packed = packed
         # counter-based schedule randomness (DESIGN.md §7): each epoch's
         # permutation derives from (seed, epoch) so schedules are replayable
         # and independent of how many epochs ran before
@@ -128,14 +131,10 @@ class MinibatchPipeline:
     def _stage_device_prefetch(self, mb: MiniBatch):
         if not self.to_device:
             return mb
-        dev = dict(
-            input_feats=jax.device_put(mb.input_feats),
-            seeds=jax.device_put(mb.seeds),
-            seed_mask=jax.device_put(mb.seed_mask),
-            labels=None if mb.labels is None else jax.device_put(mb.labels),
-            blocks=_device_blocks(mb),
-        )
-        return mb, dev
+        tree = dict(input_feats=mb.input_feats, seeds=mb.seeds,
+                    seed_mask=mb.seed_mask, labels=mb.labels,
+                    blocks=_host_blocks(mb))
+        return mb, device_stage(tree, packed=self.packed)
 
     # ---- driving ------------------------------------------------------
     def _epoch_rng(self, epoch: int) -> np.random.Generator:
@@ -257,17 +256,11 @@ class EdgeMinibatchPipeline(MinibatchPipeline):
     def _stage_device_prefetch(self, emb):
         if not self.to_device:
             return emb
-        dev = dict(
-            input_feats=jax.device_put(emb.input_feats),
-            seed_mask=jax.device_put(emb.seed_mask),
-            pos_u=jax.device_put(emb.pos_u),
-            pos_v=jax.device_put(emb.pos_v),
-            neg_v=jax.device_put(emb.neg_v),
-            pair_mask=jax.device_put(emb.pair_mask),
-            edge_etypes=jax.device_put(emb.edge_etypes),
-            blocks=_device_blocks(emb),
-        )
-        return emb, dev
+        tree = dict(input_feats=emb.input_feats, seed_mask=emb.seed_mask,
+                    pos_u=emb.pos_u, pos_v=emb.pos_v, neg_v=emb.neg_v,
+                    pair_mask=emb.pair_mask, edge_etypes=emb.edge_etypes,
+                    blocks=_host_blocks(emb))
+        return emb, device_stage(tree, packed=self.packed)
 
     # ---- driving ------------------------------------------------------
     def _schedule_source(self, epochs):

@@ -15,10 +15,10 @@ from __future__ import annotations
 
 from typing import Iterator, Optional
 
-import jax
 import numpy as np
 
 from ..core.pipeline import AsyncPipeline, Stage
+from ..kernels.pack import device_stage
 
 
 def _synthetic_tokens(rng: np.random.Generator, vocab: int, n: int,
@@ -44,7 +44,7 @@ class TokenStream:
     def __init__(self, vocab: int, batch: int, seq: int, *, cfg=None,
                  seed: int = 0, host_index: int = 0, host_count: int = 1,
                  sync: bool = False, file: Optional[str] = None,
-                 depths: Optional[dict] = None):
+                 depths: Optional[dict] = None, packed: bool = True):
         self.vocab = vocab
         self.batch = batch
         self.seq = seq
@@ -55,6 +55,8 @@ class TokenStream:
         self.file = None
         if file is not None:
             self.file = np.memmap(file, dtype=np.int32, mode="r")
+        # packed=True: one device_put per batch (DESIGN.md §9)
+        self.packed = packed
         d = {"assemble": 8, "host_prefetch": 4, "device_prefetch": 1}
         d.update(depths or {})
         stages = [
@@ -98,7 +100,10 @@ class TokenStream:
         return batch
 
     def _device_prefetch(self, batch: dict) -> dict:
-        return {k: jax.device_put(v) for k, v in batch.items()}
+        staged = device_stage(batch, packed=self.packed)
+        # LM steps index the dict directly, so unpack to a flat mapping of
+        # device arrays (the unpack is a jitted zero-copy static slice)
+        return staged.unpack() if self.packed else staged
 
     # ---- iteration ----------------------------------------------------
     def __iter__(self):

@@ -1,0 +1,7 @@
+from .ops import fused_edge_softmax_aggregate
+from .ref import fused_edge_softmax_aggregate_ref
+from .kernel import fused_edge_softmax_aggregate_pallas
+
+__all__ = ["fused_edge_softmax_aggregate",
+           "fused_edge_softmax_aggregate_ref",
+           "fused_edge_softmax_aggregate_pallas"]

@@ -1,0 +1,29 @@
+"""Public op: fused attention tail with implementation dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import fused_edge_softmax_aggregate_pallas
+from .ref import fused_edge_softmax_aggregate_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_edge_softmax_aggregate(h_proj: jnp.ndarray, scores: jnp.ndarray,
+                                 edge_src: jnp.ndarray, edge_dst: jnp.ndarray,
+                                 edge_mask: jnp.ndarray, num_dst: int,
+                                 impl: str = "auto") -> jnp.ndarray:
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return fused_edge_softmax_aggregate_ref(h_proj, scores, edge_src,
+                                                edge_dst, edge_mask, num_dst)
+    if impl == "pallas":
+        return fused_edge_softmax_aggregate_pallas(h_proj, scores, edge_src,
+                                                   edge_dst, edge_mask,
+                                                   num_dst,
+                                                   interpret=not _on_tpu())
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused attention tail (edge softmax -> weighted
+gather -> segment-sum).
+
+Exactly the composition ``gat_layer`` used to inline, so routing the layer
+through this op with ``impl="ref"`` produces the SAME jaxpr as before the
+fusion existed (pinned by the golden byte-identity tests).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..edge_softmax.ref import edge_softmax_ref
+from ..segment_sum.ref import segment_sum_ref
+
+
+def fused_edge_softmax_aggregate_ref(h_proj: jnp.ndarray,
+                                     scores: jnp.ndarray,
+                                     edge_src: jnp.ndarray,
+                                     edge_dst: jnp.ndarray,
+                                     edge_mask: jnp.ndarray,
+                                     num_dst: int) -> jnp.ndarray:
+    """h_proj: (V, H, Dh); scores: (E, H) -> (num_dst, H*Dh): per-dst
+    softmax over incoming edges, attention-weighted sum of source rows."""
+    alpha = edge_softmax_ref(scores, edge_dst, edge_mask, num_dst)
+    msg = (h_proj[edge_src] * alpha[:, :, None]).reshape(edge_src.shape[0], -1)
+    return segment_sum_ref(msg, edge_dst, edge_mask, num_dst)

@@ -1,0 +1,6 @@
+from .ops import fused_gather_aggregate
+from .ref import fused_gather_aggregate_ref
+from .kernel import fused_gather_aggregate_pallas
+
+__all__ = ["fused_gather_aggregate", "fused_gather_aggregate_ref",
+           "fused_gather_aggregate_pallas"]

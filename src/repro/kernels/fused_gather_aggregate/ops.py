@@ -1,0 +1,33 @@
+"""Public op: fused gather->aggregate with implementation dispatch.
+
+``impl="auto"`` picks the jnp reference on CPU (where XLA fuses the gather
+and scatter-add fine and Pallas interpret mode is an emulator) and the
+fused Pallas kernel on TPU.  The ref path composes EXACTLY the expressions
+the layers used to inline, so the CPU default stays byte-identical.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import fused_gather_aggregate_pallas
+from .ref import fused_gather_aggregate_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_gather_aggregate(h_src: jnp.ndarray, edge_src: jnp.ndarray,
+                           edge_dst: jnp.ndarray, edge_mask: jnp.ndarray,
+                           num_dst: int, impl: str = "auto") -> jnp.ndarray:
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return fused_gather_aggregate_ref(h_src, edge_src, edge_dst,
+                                          edge_mask, num_dst)
+    if impl == "pallas":
+        return fused_gather_aggregate_pallas(h_src, edge_src, edge_dst,
+                                             edge_mask, num_dst,
+                                             interpret=not _on_tpu())
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused gather->aggregate op.
+
+Exactly the composition the GNN layers used to inline —
+``segment_sum_ref(h_src[edge_src], ...)`` — so routing a layer through
+this op with ``impl="ref"`` produces the SAME jaxpr as before the fusion
+existed (the golden byte-identity tests pin this).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..segment_sum.ref import segment_sum_ref
+
+
+def fused_gather_aggregate_ref(h_src: jnp.ndarray, edge_src: jnp.ndarray,
+                               edge_dst: jnp.ndarray, edge_mask: jnp.ndarray,
+                               num_dst: int) -> jnp.ndarray:
+    """h_src: (V, F); edge_src/edge_dst: (E,); -> (num_dst, F) masked sum
+    of gathered source rows per destination."""
+    return segment_sum_ref(h_src[edge_src], edge_dst, edge_mask, num_dst)

@@ -1,0 +1,5 @@
+from .ops import sparse_adam_apply
+from .ref import sparse_adam_ref
+from .kernel import sparse_adam_pallas
+
+__all__ = ["sparse_adam_apply", "sparse_adam_ref", "sparse_adam_pallas"]

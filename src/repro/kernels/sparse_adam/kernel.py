@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused row-sparse Adam (gather -> update -> scatter).
+
+The KVStore servers apply Adam to exactly the rows a mini-batch touched.
+Expressed naively on an accelerator that is gather / three elementwise
+updates / scatter — five HBM round trips over the full tables.  Here the
+whole update runs as scalar-prefetch-driven Pallas programs: the row ids
+are prefetched to SMEM, each grid step DMAs one (1, D) row of w/m/v in,
+updates it, and writes it back through ``input_output_aliases`` — rows
+never touched keep their exact bytes because the output IS the input
+buffer.
+
+Why TWO pallas_calls (products, then update+scatter) and not one: the
+bitwise contract.  The server-side NumPy update is the repo's oracle, and
+XLA (CPU *and* TPU) contracts ``a*b + c`` into a fused multiply-add,
+which rounds once where NumPy rounds twice — a 1-ulp divergence the
+byte-identity tests would catch (``optimization_barrier`` does not
+survive XLA:CPU's fusion pass; measured).  The split puts every fmul in
+one program and every fadd in the other, so no program contains a
+contractible mul->add pair:
+
+  * program 1 (gather + products):  p_m = beta1 * m[row],
+    p_v = beta2 * v[row] — multiplies only;
+  * host (NumPy, shared with the oracle): c_m = (1-beta1)*g,
+    c_v = (1-beta2)*g*g, bias corrections 1 - beta**t;
+  * program 2 (update + scatter):  m' = p_m + c_m, v' = p_v + c_v,
+    w' = w[row] - lr*(m'/bc1) / (sqrt(v'/bc2) + eps) — the only multiply
+    (``lr * mhat``) feeds a divide, which never contracts.
+
+Both calls dispatch eagerly (no enclosing jit), so XLA cannot fuse across
+them.  Remaining ops are single correctly-rounded IEEE f32 ops on both
+NumPy and XLA: the result is bit-identical to the NumPy reference
+(pinned against the dense oracle in tests/test_embedding_oracle.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _products_kernel(rows_ref, m_ref, v_ref, pm_ref, pv_ref, *,
+                     beta1: float, beta2: float):
+    del rows_ref                    # consumed by the index_maps
+    pm_ref[...] = beta1 * m_ref[...]
+    pv_ref[...] = beta2 * v_ref[...]
+
+
+def _update_kernel(rows_ref, w_ref, m_tab_ref, v_tab_ref, pm_ref, pv_ref,
+                   cm_ref, cv_ref, bc1_ref, bc2_ref,
+                   w_out, m_out, v_out, *, lr: float, eps: float):
+    del rows_ref, m_tab_ref, v_tab_ref    # aliased outputs / index_maps
+    mm = pm_ref[...] + cm_ref[...]
+    vv = pv_ref[...] + cv_ref[...]
+    mhat = mm / bc1_ref[...]
+    vhat = vv / bc2_ref[...]
+    w_out[...] = w_ref[...] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    m_out[...] = mm
+    v_out[...] = vv
+
+
+def _row_spec(d):
+    return pl.BlockSpec((1, d), lambda i, rows: (rows[i], 0))
+
+
+def _seq_spec(d):
+    return pl.BlockSpec((1, d), lambda i, rows: (i, 0))
+
+
+def sparse_adam_pallas(w: jnp.ndarray, m: jnp.ndarray, v: jnp.ndarray,
+                       rows: jnp.ndarray, cm: jnp.ndarray, cv: jnp.ndarray,
+                       bc1: jnp.ndarray, bc2: jnp.ndarray, *,
+                       beta1: float, beta2: float, lr: float, eps: float,
+                       interpret: bool = True):
+    """Full tables in, full tables out; only ``rows`` change.
+
+    w/m/v: (N, D) f32; rows: (R,) unique int32; cm/cv: (R, D) f32 host-
+    precomputed ``(1-beta)*g`` terms; bc1/bc2: (R, D) f32 bias corrections
+    (row-broadcast by the caller).  Returns (w', m', v').
+    """
+    n, d = w.shape
+    r = rows.shape[0]
+    rows = rows.astype(jnp.int32)
+
+    grid_spec = lambda n_in: pltpu.PrefetchScalarGridSpec(   # noqa: E731
+        num_scalar_prefetch=1, grid=(r,), in_specs=n_in[0],
+        out_specs=n_in[1])
+
+    pm, pv = pl.pallas_call(
+        functools.partial(_products_kernel, beta1=beta1, beta2=beta2),
+        grid_spec=grid_spec(([_row_spec(d), _row_spec(d)],
+                             [_seq_spec(d), _seq_spec(d)])),
+        out_shape=[jax.ShapeDtypeStruct((r, d), w.dtype)] * 2,
+        interpret=interpret,
+    )(rows, m, v)
+
+    # aliased scatter: inputs w/m/v (operand indices 1..3 — the scalar-
+    # prefetch rows are operand 0) become the outputs, so untouched rows
+    # pass through bit-exactly without ever being read
+    w2, m2, v2 = pl.pallas_call(
+        functools.partial(_update_kernel, lr=lr, eps=eps),
+        grid_spec=grid_spec((
+            [_row_spec(d)] * 3 + [_seq_spec(d)] * 6,
+            [_row_spec(d)] * 3)),
+        out_shape=[jax.ShapeDtypeStruct((n, d), w.dtype)] * 3,
+        input_output_aliases={1: 0, 2: 1, 3: 2},
+        interpret=interpret,
+    )(rows, w, m, v, pm, pv, cm, cv, bc1, bc2)
+    return w2, m2, v2

@@ -1,0 +1,37 @@
+"""NumPy reference for the fused row-sparse Adam update.
+
+This is VERBATIM the per-shard update ``DistEmbedding.push_grad`` has
+always applied (and the exact float32 expression sequence of the dense
+oracle in ``tests/test_embedding_oracle.py``) — the ref path mutates the
+tables in place with plain NumPy, so the default CPU path stays
+bit-identical to every golden value pinned before the kernel existed.
+
+Bias corrections ``1 - beta**t`` are precomputed by the CALLER (in NumPy,
+from the int64 step counts): ``beta ** t`` is a transcendental whose
+rounding differs between libm and XLA, so it must never enter the device
+kernel — dividing by a precomputed correction is a single correctly-
+rounded f32 op on both sides.  See :mod:`.kernel` for the rest of the
+bitwise contract.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def sparse_adam_ref(w: np.ndarray, m: np.ndarray, v: np.ndarray,
+                    rows: np.ndarray, grad: np.ndarray,
+                    bc1: np.ndarray, bc2: np.ndarray, *,
+                    beta1: float, beta2: float, lr: float,
+                    eps: float) -> None:
+    """In-place row-sparse Adam on full tables.
+
+    w/m/v: (N, D) tables (mutated); rows: (R,) unique row ids;
+    grad: (R, D) f32 coalesced gradients; bc1/bc2: (R, 1) f32
+    bias corrections ``1 - beta**t`` for the rows' post-increment counts.
+    """
+    g = grad
+    m[rows] = beta1 * m[rows] + (1 - beta1) * g
+    v[rows] = beta2 * v[rows] + (1 - beta2) * g * g
+    mhat = m[rows] / bc1
+    vhat = v[rows] / bc2
+    w[rows] -= (lr * mhat / (np.sqrt(vhat) + eps)).astype(w.dtype)

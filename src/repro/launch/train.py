@@ -75,6 +75,8 @@ def run_gnn(args):
         task=args.task, num_negs=args.num_negs, score_fn=args.score_fn,
         neg_mode=args.neg_mode, neg_exclude=args.neg_exclude,
         sample_workers=args.sample_workers,
+        packed_staging=not args.no_packed_staging,
+        impl=args.impl,
         network=NetworkModel(sleep=args.simulate_network))
     tr = DistGNNTrainer(ds, cfg, job)
     print(f"[train] {args.arch}/{args.task} on {args.dataset}: "
@@ -111,7 +113,8 @@ def run_lm(args):
     step = jax.jit(make_train_step(cfg, lr=args.lr))
     params, opt = init_train_state(cfg, seed=0)
     stream = TokenStream(vocab=cfg.vocab_size, batch=args.batch_size,
-                         seq=args.seq_len, seed=0, cfg=cfg)
+                         seq=args.seq_len, seed=0, cfg=cfg,
+                         packed=not args.no_packed_staging)
     t0 = time.time()
     for i, batch in enumerate(stream):
         if i >= args.steps:
@@ -185,6 +188,16 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--cache-policy", default="clock",
                     choices=["clock", "lru"],
                     help="feature-cache eviction policy")
+    ap.add_argument("--impl", default=None,
+                    choices=["auto", "ref", "pallas"],
+                    help="kernel implementation for the GNN aggregations "
+                         "and sparse-Adam (auto = Pallas on TPU, jnp/NumPy "
+                         "oracle elsewhere; default keeps the model "
+                         "config's choice)")
+    ap.add_argument("--no-packed-staging", action="store_true",
+                    help="ship each batch array to the device separately "
+                         "instead of the packed single-device_put staging "
+                         "(DESIGN.md §9; bytes are identical either way)")
     ap.add_argument("--sample-workers", type=int, default=1,
                     help="sampling-stage worker threads per trainer "
                          "(batches are byte-identical for any value; "

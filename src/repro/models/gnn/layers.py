@@ -12,7 +12,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ...kernels import edge_softmax, segment_sum
+from ...kernels import (fused_edge_softmax_aggregate, fused_gather_aggregate,
+                        segment_sum)
 
 
 def _degrees(edge_dst, edge_mask, num_dst):
@@ -26,8 +27,10 @@ def sage_layer(params, h_src: jnp.ndarray, block: dict, num_dst: int,
     """GraphSAGE mean aggregator: act(W_self h_v + W_neigh mean_u h_u)."""
     edge_src, edge_dst = block["edge_src"], block["edge_dst"]
     edge_mask = block["edge_mask"]
-    msg = h_src[edge_src]                                   # (E, d_in)
-    agg = segment_sum(msg, edge_dst, edge_mask, num_dst, impl=impl)
+    # fused gather->aggregate: the (E, d_in) message array never
+    # materializes on the pallas path (ref path = the old two-step jaxpr)
+    agg = fused_gather_aggregate(h_src, edge_src, edge_dst, edge_mask,
+                                 num_dst, impl=impl)
     agg = agg / _degrees(edge_dst, edge_mask, num_dst)[:, None]
     h_self = h_src[:num_dst]
     out = h_self @ params["w_self"] + agg @ params["w_neigh"] + params["b"]
@@ -46,9 +49,9 @@ def gat_layer(params, h_src: jnp.ndarray, block: dict, num_dst: int,
     er = jnp.einsum("nhf,hf->nh", h_proj[:num_dst], a_r)    # (cap_dst, H)
     scores = el[edge_src] + er[edge_dst]                    # (E, H)
     scores = jax.nn.leaky_relu(scores, negative_slope)
-    alpha = edge_softmax(scores, edge_dst, edge_mask, num_dst, impl=impl)
-    msg = (h_proj[edge_src] * alpha[:, :, None]).reshape(edge_src.shape[0], -1)
-    out = segment_sum(msg, edge_dst, edge_mask, num_dst, impl=impl)
+    # fused softmax -> weighted gather -> aggregate (attention tail)
+    out = fused_edge_softmax_aggregate(h_proj, scores, edge_src, edge_dst,
+                                       edge_mask, num_dst, impl=impl)
     out = out + params["b"]
     return activation(out) if activation is not None else out
 
@@ -82,8 +85,7 @@ def rgcn_layer(params, h_src: jnp.ndarray, block: dict, num_dst: int,
             es, ed = edge_src, edge_dst
             em = edge_mask & (edge_types == r)
         proj = h_src @ params["w_rel"][r]                   # (cap_src, d_out)
-        msg = proj[es]
-        agg = segment_sum(msg, ed, em, num_dst, impl=impl)
+        agg = fused_gather_aggregate(proj, es, ed, em, num_dst, impl=impl)
         agg = agg / _degrees(ed, em, num_dst)[:, None]
         out = out + agg
     return activation(out) if activation is not None else out

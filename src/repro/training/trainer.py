@@ -36,6 +36,7 @@ from ..api.dist_graph import DistGraph
 from ..core.kvstore import CacheConfig, NetworkModel
 from ..core.sampler import EdgeBatchSampler
 from ..graph.datasets import GraphDataset
+from ..kernels.pack import device_stage
 from ..models.gnn import (GNNConfig, apply_gnn, init_gnn, init_lp_head,
                           lp_loss_from_scores, lp_metrics, lp_pair_scores,
                           lp_ranks, nc_accuracy, nc_loss)
@@ -59,6 +60,15 @@ class TrainJobConfig:
     # sampling-stage worker pool per trainer (§5.5's multiple sampling
     # workers); batches are byte-identical for any value (DESIGN.md §7)
     sample_workers: int = 1
+    # device staging (DESIGN.md §9): True = the stacked per-step batch is
+    # flattened into one contiguous host buffer per dtype and shipped with
+    # a SINGLE jax.device_put + jitted static-slice unpack; False = legacy
+    # per-array transfers. Bytes reaching the jitted step are identical.
+    packed_staging: bool = True
+    # kernel implementation for the model's aggregations (GNNConfig.impl)
+    # and the sparse-Adam path: None = keep the model config's own choice
+    # ("auto" → pallas on TPU, jnp oracle elsewhere); "ref"/"pallas" force
+    impl: Optional[str] = None
     # ---- workload (the paper trains "various GNN workloads") ----------
     # link_prediction: positive-edge batches over each trainer's owned
     # edges, `num_negs` uniform corrupted dsts per edge, `score_fn` head
@@ -81,6 +91,8 @@ class DistGNNTrainer:
     def __init__(self, ds: GraphDataset, model_cfg: GNNConfig,
                  job: TrainJobConfig):
         self.ds = ds
+        if job.impl is not None:
+            model_cfg = dataclasses.replace(model_cfg, impl=job.impl)
         self.cfg = model_cfg
         self.job = job
         if job.task not in TASKS:
@@ -243,8 +255,16 @@ class DistGNNTrainer:
             return params2, opt2, loss, acc
         return step
 
-    @staticmethod
-    def _stack(batches: List[dict]) -> dict:
+    def _stack(self, batches: List[dict]) -> dict:
+        """Stack the T trainers' host batches on a leading axis and stage
+        them on the device.  Packed staging (DESIGN.md §9) stacks in host
+        memory and issues ONE ``jax.device_put`` for the whole step's
+        input (then a jitted static-slice unpack); the legacy path moves
+        each leaf separately.  Device bytes are identical either way."""
+        if self.job.packed_staging:
+            host = jax.tree.map(lambda *xs: np.stack(xs), *batches)
+            return device_stage(host, packed=True).unpack()
+
         def stack_leaf(*xs):
             return jnp.stack([jnp.asarray(x) for x in xs])
         return jax.tree.map(stack_leaf, *batches)

@@ -191,6 +191,124 @@ def test_edge_loader_matches_pipeline_bytes(homo_g):
 
 
 # ---------------------------------------------------------------------------
+# golden byte-identity: packed staging + fused kernels vs the per-array /
+# unfused path (ISSUE 6 acceptance)
+# ---------------------------------------------------------------------------
+
+def _device_tree_bytes(dev) -> dict:
+    """{path: (dtype, shape, bytes)} of a staged device tree (PackedBatch
+    or per-array dict alike)."""
+    from repro.kernels.pack import PackedBatch, flatten_tree
+    tree = dev.unpack() if isinstance(dev, PackedBatch) else dev
+    flat, nones = flatten_tree(
+        __import__("jax").tree.map(np.asarray, tree))
+    out = {k: (str(v.dtype), v.shape, v.tobytes()) for k, v in flat.items()}
+    out["__none__"] = nones
+    return out
+
+
+def _staged_stream(loader_cls, g, ids, fanouts, packed, **kw):
+    ld = loader_cls(g, ids, fanouts, device_prefetch=True,
+                    packed_staging=packed, sync=True, non_stop=False, **kw)
+    out = [_device_tree_bytes(b.device) for b in ld.epoch(0)]
+    ld.close()
+    return out
+
+
+@pytest.mark.parametrize("gfix", ["homo_g", "hetero_g"])
+def test_packed_staging_byte_identity_node(gfix, request):
+    g = request.getfixturevalue(gfix)
+    seeds = g.train_nids[:64]
+    fanouts = [dict(FANOUTS_TYPED)] * 2 if g.hetero else [5, 5]
+    kw = dict(batch_size=16, labels=g.labels[seeds], seed=31,
+              sampler_seed=32)
+    packed = _staged_stream(NodeDataLoader, g, seeds, fanouts, True, **kw)
+    per_arr = _staged_stream(NodeDataLoader, g, seeds, fanouts, False, **kw)
+    assert len(packed) == len(per_arr) > 0
+    assert packed == per_arr, "packed staging changed the device bytes"
+
+
+@pytest.mark.parametrize("gfix", ["homo_g", "hetero_g"])
+def test_packed_staging_byte_identity_edge(gfix, request):
+    g = request.getfixturevalue(gfix)
+    owned = g.edge_split()[:64]
+    fanouts = [dict(FANOUTS_TYPED)] * 2 if g.hetero else [5, 5]
+    kw = dict(batch_size=8, num_negs=3, seed=33, sampler_seed=34,
+              edge_seed=35)
+    packed = _staged_stream(EdgeDataLoader, g, owned, fanouts, True, **kw)
+    per_arr = _staged_stream(EdgeDataLoader, g, owned, fanouts, False, **kw)
+    assert len(packed) == len(per_arr) > 0
+    assert packed == per_arr, "packed staging changed the device bytes"
+
+
+def test_model_input_packed_contract(homo_g):
+    from repro.kernels.pack import PackedBatch
+    g = homo_g
+    seeds = g.train_nids[:32]
+    with NodeDataLoader(g, seeds, [5, 5], batch_size=16,
+                        labels=g.labels[seeds], device_prefetch=True,
+                        packed_staging=True, sync=True, non_stop=False,
+                        seed=41) as ld:
+        b = next(iter(ld))
+        staged = b.model_input(packed=True)
+        assert isinstance(staged, PackedBatch)
+        # the unpacked model_input is a view of the SAME staged batch
+        mi = b.model_input()
+        assert set(mi) == set(NodeBatch._model_keys)
+        assert np.array_equal(np.asarray(mi["input_feats"]),
+                              np.asarray(staged["input_feats"]))
+    # host-side loaders refuse the packed form
+    with NodeDataLoader(g, seeds, [5, 5], batch_size=16,
+                        labels=g.labels[seeds], seed=41) as ld:
+        with pytest.raises(ValueError, match="packed"):
+            next(iter(ld)).model_input(packed=True)
+
+
+def _train_golden(ds, cfg, job_kw, epochs):
+    import jax
+    from repro.api import DistGNNTrainer, TrainJobConfig
+    tr = DistGNNTrainer(ds, cfg, TrainJobConfig(
+        num_machines=2, trainers_per_machine=1, seed=5, **job_kw))
+    losses = [tr.train_epoch(e)["loss"] for e in range(epochs)]
+    params = jax.tree_util.tree_leaves(tr.params)
+    blob = b"".join(np.asarray(p).tobytes() for p in params)
+    tr.stop()
+    return losses, blob
+
+
+@pytest.mark.parametrize("task,arch,dataset,scale,epochs", [
+    ("node_classification", "graphsage", "product-sim", 11, 2),
+    ("node_classification", "rgcn", "mag-sim", 13, 2),
+    # LP schedules EVERY owned edge per epoch — smaller graphs keep the
+    # golden runs short without weakening the bitwise pin
+    ("link_prediction", "graphsage", "product-sim", 9, 1),
+    ("link_prediction", "rgcn", "mag-sim", 10, 1),
+])
+def test_trainer_packed_fused_golden_bytes(task, arch, dataset, scale,
+                                           epochs):
+    """The acceptance pin: packed staging + the fused-kernel dispatch
+    (``impl`` explicit) train to BIT-IDENTICAL losses and parameter bytes
+    vs the per-array / pre-fusion path, on node+edge × homo+typed."""
+    from repro.graph import get_dataset
+    from repro.models.gnn import GNNConfig
+    ds = get_dataset(dataset, scale=scale)
+    cfg = GNNConfig(arch=arch, in_dim=ds.feats.shape[1], hidden_dim=16,
+                    num_classes=(16 if task == "link_prediction"
+                                 else ds.num_classes),
+                    fanouts=[5, 5], batch_size=32,
+                    num_rels=ds.graph.num_etypes)
+    kw = dict(task=task)
+    if task == "link_prediction":
+        kw["num_negs"] = 3
+    ref = _train_golden(ds, cfg, dict(packed_staging=False, impl="ref",
+                                      **kw), epochs)
+    new = _train_golden(ds, cfg, dict(packed_staging=True, impl="auto",
+                                      **kw), epochs)
+    assert new[0] == ref[0], f"losses diverged: {new[0]} vs {ref[0]}"
+    assert new[1] == ref[1], "parameter bytes diverged"
+
+
+# ---------------------------------------------------------------------------
 # loader protocol: DGL triples, len, epoch advancement
 # ---------------------------------------------------------------------------
 

@@ -44,9 +44,10 @@ class DenseAdamOracle:
                          ).astype(self.w.dtype)
 
 
-def _world(seed=0):
+def _world(seed=0, impl="auto"):
     store = DistKVStore({"node": PartitionPolicy("node", OFFSETS)})
-    emb = DistEmbedding(store, "emb", NUM, DIM, "node", seed=seed)
+    emb = DistEmbedding(store, "emb", NUM, DIM, "node", seed=seed,
+                        impl=impl)
     oracle = DenseAdamOracle(store.gather_all("emb"), emb.optim)
     return store, emb, oracle
 
@@ -58,8 +59,9 @@ def _push_seq(rng, steps):
         yield ids, rng.standard_normal((n, DIM)).astype(np.float32)
 
 
-def test_sparse_adam_matches_dense_oracle_bitwise():
-    store, emb, oracle = _world()
+@pytest.mark.parametrize("impl", ["auto", "ref", "pallas"])
+def test_sparse_adam_matches_dense_oracle_bitwise(impl):
+    store, emb, oracle = _world(impl=impl)
     client = store.client(0)
     rng = np.random.default_rng(7)
     touched = set()
