@@ -1,0 +1,135 @@
+"""Elastic-recovery benchmark: emits ``BENCH_recovery.json`` so the
+fault-tolerance cost trajectory accumulates in CI.
+
+For each checkpoint interval, one trainer runs with a seeded
+:class:`~repro.api.FaultInjector` that kills it mid-epoch; a replacement
+trainer is built, ``recover()``-ed from the last consistent checkpoint and
+fast-forwarded to the death coordinate (DESIGN.md §10). Measured per
+interval:
+
+  * ``restore_s``     — checkpoint load + fast-forward arming time;
+  * ``replay_batches``— batches between the last checkpoint and the death
+                        coordinate (the deterministic-replay work);
+  * ``recovery_s``    — restore + replay wall-clock until the killed run's
+                        position is regained;
+  * ``bytes_identical`` — whether the recovered run's final parameters are
+                        byte-identical to the uninterrupted baseline's
+                        (the whole point; always expected True).
+
+Run:  PYTHONPATH=src python -m benchmarks.recovery_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.api import DistGNNTrainer, FaultInjector, TrainJobConfig, TrainerDeath
+from repro.graph import get_dataset
+from repro.models.gnn import GNNConfig
+
+from .common import csv_line
+
+
+def _param_bytes(params) -> list:
+    return [np.asarray(x).tobytes() for x in jax.tree_util.tree_leaves(params)]
+
+
+def _world(scale: int):
+    ds = get_dataset("product-sim", scale=scale)
+    cfg = GNNConfig(arch="graphsage", in_dim=ds.feats.shape[1],
+                    hidden_dim=16, num_classes=ds.num_classes,
+                    fanouts=[3, 2], batch_size=8)
+    return ds, cfg
+
+
+def _job(**kw) -> TrainJobConfig:
+    return TrainJobConfig(num_machines=2, trainers_per_machine=1, seed=0,
+                          **kw)
+
+
+def run(scale: int = 10, out_path: str = "BENCH_recovery.json",
+        smoke: bool = False) -> dict:
+    if smoke:
+        scale = min(scale, 10)
+    epochs = 2
+    ds, cfg = _world(scale)
+
+    # uninterrupted baseline: the byte-identity reference
+    tr = DistGNNTrainer(ds, cfg, _job())
+    for e in range(epochs):
+        tr.train_epoch(e)
+    baseline = _param_bytes(tr.params)
+    bpe = tr.batches_per_epoch
+    tr.stop()
+    kill_at = (1, max(bpe // 2, 1))   # mid-epoch death in the last epoch
+
+    intervals = [1, 2, 4] if smoke else [1, 2, 4, 8]
+    rows = []
+    for interval in intervals:
+        with tempfile.TemporaryDirectory() as tmp:
+            ck = os.path.join(tmp, "ck")
+            inj = FaultInjector(seed=7, kill_at=kill_at)
+            victim = DistGNNTrainer(ds, cfg, _job(
+                checkpoint_dir=ck, checkpoint_interval=interval,
+                fault_injector=inj))
+            try:
+                for e in range(epochs):
+                    victim.train_epoch(e)
+                raise AssertionError("fault schedule never fired")
+            except TrainerDeath:
+                pass
+            victim.stop()
+
+            t0 = time.perf_counter()
+            revived = DistGNNTrainer(ds, cfg, _job())
+            meta = revived.recover(ck)
+            restore_s = time.perf_counter() - t0
+            replay = ((kill_at[0] - meta["epoch"]) * bpe
+                      + kill_at[1] - meta["batch_index"])
+            # replay up to (and past) the death coordinate, then finish
+            for e in range(meta["epoch"], epochs):
+                revived.train_epoch(e)
+            recovery_s = time.perf_counter() - t0
+            identical = _param_bytes(revived.params) == baseline
+            revived.stop()
+        row = {"checkpoint_interval": interval,
+               "restore_s": restore_s,
+               "replay_batches": int(replay),
+               "recovery_s": recovery_s,
+               "bytes_identical": bool(identical)}
+        rows.append(row)
+        csv_line(f"recovery/interval_{interval}", recovery_s * 1e6,
+                 f"restore_s={restore_s:.3f};replay={replay};"
+                 f"identical={identical}")
+
+    result = {"config": {"scale": scale, "smoke": smoke, "epochs": epochs,
+                         "batches_per_epoch": int(bpe),
+                         "kill_at": list(kill_at),
+                         "backend": jax.default_backend()},
+              "intervals": rows}
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[recovery_bench] wrote {out_path}")
+    assert all(r["bytes_identical"] for r in rows), \
+        "recovered parameters diverged from the uninterrupted baseline"
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(prog="benchmarks.recovery_bench")
+    ap.add_argument("--out", default="BENCH_recovery.json")
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small scale + fewer intervals for CI")
+    args = ap.parse_args()
+    run(scale=args.scale, out_path=args.out, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

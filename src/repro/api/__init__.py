@@ -14,6 +14,8 @@ Everything a training script needs lives here::
 these façades, so importing it eagerly here would be circular.
 """
 from ..core.kvstore.embedding import DistEmbedding, SparseAdamConfig
+from ..core.kvstore.faults import (FaultInjector, RPCRetriesExhausted,
+                                   TrainerDeath, TransientRPCError)
 from .dataloader import (EdgeBatch, EdgeDataLoader, NodeBatch,
                          NodeDataLoader)
 from .dist_graph import DistGraph, DistTensor
@@ -22,6 +24,8 @@ __all__ = [
     "DistGraph", "DistTensor", "DistEmbedding", "SparseAdamConfig",
     "NodeDataLoader", "EdgeDataLoader", "NodeBatch", "EdgeBatch",
     "DistGNNTrainer", "TrainJobConfig",
+    "FaultInjector", "TransientRPCError", "RPCRetriesExhausted",
+    "TrainerDeath",
 ]
 
 _LAZY = ("DistGNNTrainer", "TrainJobConfig")

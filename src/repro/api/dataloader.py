@@ -163,10 +163,18 @@ class _BaseLoader:
             return self._wrap_cls(mb, device=dev)
         return self._wrap_cls(item)
 
-    def epoch(self, epoch: int) -> Iterator:
+    def epoch(self, epoch: int, start_batch: int = 0) -> Iterator:
         """Iterate one specific epoch's batches (the trainer's driver; in
-        non-stop mode epochs must be requested consecutively)."""
+        non-stop mode epochs must be requested consecutively).
+
+        ``start_batch=k`` is the recovery fast-forward (DESIGN.md §10):
+        the epoch's schedule is derived in full and emission begins at
+        batch k — byte-identical to the batches a live run would serve
+        from position k onward."""
         if self.mode == "eval":
+            if start_batch:
+                raise ValueError("start_batch is a train-mode recovery "
+                                 "feature; eval loaders always run in full")
             yield from self._eval_iter()
             return
         if self._mid_epoch:
@@ -175,8 +183,8 @@ class _BaseLoader:
             # a fresh run of the same epoch)
             self.close(_rewind_epoch=False)
         n = len(self)
-        served = 0
-        for item in self.pipeline.epoch(epoch):
+        served = start_batch
+        for item in self.pipeline.epoch(epoch, start_batch=start_batch):
             # only a stream some batch actually left is mid-epoch; a call
             # that errors before its first batch leaves the stream intact
             self._mid_epoch = True

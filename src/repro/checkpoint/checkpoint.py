@@ -1,10 +1,17 @@
-"""Checkpointing: pytrees (dense model/optimizer state) and KVStore shards
-(features + sparse embeddings + their optimizer rows).
+"""Checkpointing: pytrees (dense model/optimizer state), KVStore shards
+(features + sparse embeddings + their optimizer rows + row versions) and
+trainer-side feature-cache snapshots.
 
 No orbax dependency: each leaf goes to an .npy file, the tree structure and
 leaf paths to a JSON manifest. KVStore checkpoints are per-server (per
 machine) — on a real cluster each host writes only its own shard, which is
 what makes checkpointing billion-node embedding tables feasible.
+
+Restores are strict (DESIGN.md §10): a checkpoint that does not match its
+template — missing leaves, extra leaves, shape or dtype drift — raises
+instead of silently coercing. ``load_pytree(cast=True)`` is the explicit
+escape hatch for intentional dtype migration (e.g. an x64 checkpoint into
+an x32 run); it is the ONLY path that loses bits.
 """
 from __future__ import annotations
 
@@ -36,17 +43,42 @@ def save_pytree(tree: Any, directory: str) -> None:
         json.dump(manifest, f, indent=1)
 
 
-def load_pytree(template: Any, directory: str) -> Any:
+def load_pytree(template: Any, directory: str, *, cast: bool = False) -> Any:
+    """Load a :func:`save_pytree` checkpoint into ``template``'s structure.
+
+    Every template leaf must have a checkpointed counterpart (same path)
+    with the same shape AND dtype — a float64 leaf saved under x64 and
+    restored into a float32 template would otherwise lose bits silently.
+    ``cast=True`` opts into ``astype`` coercion for dtype mismatches
+    (shape mismatches always raise). Leaves in the checkpoint but not the
+    template raise too: a byte-exact recovery cannot ignore state it does
+    not know how to restore.
+    """
     with open(os.path.join(directory, "manifest.json")) as f:
         manifest = json.load(f)
     paths, leaves, _ = _flatten_with_paths(template)
     by_path = {m["path"]: m["file"] for m in manifest}
+    extra = sorted(set(by_path) - set(paths))
+    if extra:
+        raise KeyError(f"checkpoint has {len(extra)} leaves the template "
+                       f"does not: {extra[:5]}")
     new_leaves = []
     for p, leaf in zip(paths, leaves):
         if p not in by_path:
             raise KeyError(f"checkpoint missing leaf {p!r}")
         arr = np.load(os.path.join(directory, by_path[p]))
-        new_leaves.append(arr.astype(np.asarray(leaf).dtype))
+        want = np.asarray(leaf)
+        if arr.shape != want.shape:
+            raise ValueError(f"leaf {p!r}: checkpoint shape {arr.shape} != "
+                             f"template shape {want.shape}")
+        if arr.dtype != want.dtype:
+            if not cast:
+                raise ValueError(
+                    f"leaf {p!r}: checkpoint dtype {arr.dtype} != template "
+                    f"dtype {want.dtype} — pass cast=True to coerce "
+                    f"(lossy for narrowing casts)")
+            arr = arr.astype(want.dtype)
+        new_leaves.append(arr)
     flat_template = jax.tree_util.tree_flatten(template)[1]
     return jax.tree_util.tree_unflatten(flat_template, new_leaves)
 
@@ -56,13 +88,25 @@ def _kv_fname(part: int, name: str) -> str:
     return f"part{part}_{name.replace(':', '__')}.npy"
 
 
+def _versions_fname(name: str) -> str:
+    return f"versions_{name.replace(':', '__')}.npy"
+
+
 def save_kvstore(store, directory: str) -> None:
+    """Per-server shards plus, for mutable tensors, the exact per-row
+    version tables — the half of the cache-consistency pair that lets a
+    restored :class:`~repro.core.kvstore.FeatureCache` snapshot validate
+    again (DESIGN.md §10)."""
     os.makedirs(directory, exist_ok=True)
-    meta = {"num_parts": store.num_parts, "names": sorted(store._meta)}
+    meta = {"num_parts": store.num_parts, "names": sorted(store._meta),
+            "versions": sorted(store.mutable_names())}
     for p, server in enumerate(store.servers):
         for name in store._meta:
             np.save(os.path.join(directory, _kv_fname(p, name)),
                     server.local_view(name))
+    for name in meta["versions"]:
+        np.save(os.path.join(directory, _versions_fname(name)),
+                store.version_table(name))
     with open(os.path.join(directory, "kv_manifest.json"), "w") as f:
         json.dump(meta, f)
 
@@ -77,12 +121,60 @@ def load_kvstore(store, directory: str) -> None:
             dst = server.local_view(name)
             assert dst.shape == arr.shape, (name, dst.shape, arr.shape)
             dst[...] = arr
-    # a restore is a write like any other (DESIGN.md §5): bump mutable
-    # tensors' versions AND flush every live cache's entries — unlike
-    # pushes, a restore may rewrite even immutable tensors' bytes, so
-    # version refusal alone cannot cover it
+    # a restore is a write like any other (DESIGN.md §5): flush every live
+    # cache's entries — unlike pushes, a restore may rewrite even immutable
+    # tensors' bytes, so version refusal alone cannot cover it. Mutable
+    # tensors restore their EXACT checkpointed version tables (so a cache
+    # snapshot from the same checkpoint validates, DESIGN.md §10); legacy
+    # checkpoints without saved versions fall back to the blanket bump.
+    saved_versions = set(meta.get("versions", []))
     for name in meta["names"]:
         if store.is_mutable(name):
-            pol = store.policy_for(name)
-            store.bump_versions(name, np.arange(pol.total, dtype=np.int64))
+            if name in saved_versions:
+                store.set_versions(
+                    name,
+                    np.load(os.path.join(directory, _versions_fname(name))))
+            else:
+                pol = store.policy_for(name)
+                store.bump_versions(name,
+                                    np.arange(pol.total, dtype=np.int64))
         store.invalidate_caches(name)
+
+
+def save_cache(cache, directory: str) -> None:
+    """Snapshot a trainer's :class:`FeatureCache` (gids + rows + version
+    stamps per tensor). Pairs with the ``save_kvstore`` of the same
+    checkpoint: the stamps only validate against those version tables."""
+    os.makedirs(directory, exist_ok=True)
+    state = cache.state_dict()
+    manifest = {}
+    for name, s in state.items():
+        key = name.replace(":", "__")
+        files = {"gids": f"cache_{key}_gids.npy",
+                 "rows": f"cache_{key}_rows.npy"}
+        np.save(os.path.join(directory, files["gids"]), s["gids"])
+        np.save(os.path.join(directory, files["rows"]), s["rows"])
+        if s["versions"] is not None:
+            files["versions"] = f"cache_{key}_versions.npy"
+            np.save(os.path.join(directory, files["versions"]), s["versions"])
+        manifest[name] = files
+    with open(os.path.join(directory, "cache_manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def load_cache(cache, directory: str) -> int:
+    """Restore a :func:`save_cache` snapshot; returns rows admitted.
+    Must run AFTER ``load_kvstore`` of the same checkpoint — that call
+    both restores the version tables the snapshot's stamps are checked
+    against and flushes whatever the cache held before."""
+    with open(os.path.join(directory, "cache_manifest.json")) as f:
+        manifest = json.load(f)
+    state = {}
+    for name, files in manifest.items():
+        state[name] = {
+            "gids": np.load(os.path.join(directory, files["gids"])),
+            "rows": np.load(os.path.join(directory, files["rows"])),
+            "versions": (np.load(os.path.join(directory, files["versions"]))
+                         if "versions" in files else None),
+        }
+    return cache.load_state_dict(state)

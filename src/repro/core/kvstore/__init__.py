@@ -2,9 +2,13 @@ from .transport import NetworkModel, Transport
 from .store import DistKVStore, KVClient, KVServer, PartitionPolicy
 from .embedding import DistEmbedding, SparseAdamConfig
 from .cache import CacheConfig, FeatureCache, halo_access_counts
+from .faults import (FaultInjector, RPCRetriesExhausted, TrainerDeath,
+                     TransientRPCError)
 
 __all__ = [
     "NetworkModel", "Transport", "DistKVStore", "KVClient", "KVServer",
     "PartitionPolicy", "DistEmbedding", "SparseAdamConfig",
     "CacheConfig", "FeatureCache", "halo_access_counts",
+    "FaultInjector", "TransientRPCError", "RPCRetriesExhausted",
+    "TrainerDeath",
 ]

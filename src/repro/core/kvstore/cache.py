@@ -364,6 +364,49 @@ class FeatureCache:
                 if tc.invalidate(int(g)):
                     self.used_bytes -= tc.row_nbytes
 
+    # -- checkpoint (DESIGN.md §10) --------------------------------------
+    def state_dict(self) -> Dict[str, dict]:
+        """Snapshot every registered tensor's cached rows.
+
+        Per tensor: ``gids`` in recency order (oldest first — restoring
+        inserts in that order, so the LRU/CLOCK recency structure
+        survives), the matching ``rows``, and (mutable tensors only) the
+        per-row ``versions`` the entries were stamped with. Restoring is
+        only byte-safe together with the store's version tables from the
+        SAME checkpoint — ``repro.checkpoint`` saves/loads the pair."""
+        with self._lock:
+            out: Dict[str, dict] = {}
+            for name, tc in self._tensors.items():
+                n = len(tc.slot_of)
+                gids = np.fromiter(tc.slot_of.keys(), np.int64, count=n)
+                slots = np.fromiter(tc.slot_of.values(), np.int64, count=n)
+                out[name] = {
+                    "gids": gids,
+                    "rows": tc.rows[slots].copy(),
+                    "versions": (tc.version[slots].copy()
+                                 if tc.mutable else None),
+                }
+            return out
+
+    def load_state_dict(self, state: Dict[str, dict]) -> int:
+        """Restore a :meth:`state_dict` snapshot; returns rows admitted.
+
+        Existing entries for the snapshot's tensors are dropped first
+        (they predate or postdate the checkpoint — either way they are
+        not the checkpoint's). Entries whose saved version no longer
+        matches the store's current table are refused by ``insert``'s
+        version check, so a snapshot restored against a *different*
+        store state degrades to a cold cache instead of serving stale
+        bytes."""
+        admitted = 0
+        for name, s in state.items():
+            if name not in self._tensors:
+                continue   # tensor not registered in this cache instance
+            self.drop(name)
+            admitted += self.insert(name, s["gids"], s["rows"], force=True,
+                                    versions=s["versions"])
+        return admitted
+
     # -- pre-warm -------------------------------------------------------
     def warm(self, client, name: str, gids: np.ndarray,
              counts: Optional[np.ndarray] = None) -> int:

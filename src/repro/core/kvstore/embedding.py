@@ -99,6 +99,16 @@ class DistEmbedding:
             srv = store.servers[p]
             rows = local[m]
             gm = g[m]
+            # charge the gradient shipment BEFORE the owner applies it —
+            # same ordering as KVClient.push: a transient-fault retry
+            # (client._charge_remote) must never re-run an Adam step
+            nbytes = gm.nbytes
+            if p == getattr(client, "machine", p):
+                store.transport.charge_local(nbytes)
+            elif hasattr(client, "_charge_remote"):
+                client._charge_remote(nbytes, op="push")
+            else:
+                store.transport.charge_remote(nbytes, op="push")
             t = srv.local_view(self.name + "__t")
             mm = srv.local_view(self.name + "__m")
             vv = srv.local_view(self.name + "__v")
@@ -109,11 +119,6 @@ class DistEmbedding:
             sparse_adam_apply(w, mm, vv, rows, gm, t, beta1=cfg.beta1,
                               beta2=cfg.beta2, lr=cfg.lr, eps=cfg.eps,
                               impl=self.impl)
-            nbytes = gm.nbytes
-            if p == getattr(client, "machine", p):
-                store.transport.charge_local(nbytes)
-            else:
-                store.transport.charge_remote(nbytes)
         # AFTER the owners applied the update: bump versions + drop own
         # cached copies (the shared writer protocol)
         client.notify_write(self.name, uniq)

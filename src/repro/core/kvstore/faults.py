@@ -1,0 +1,127 @@
+"""Failure injection for elastic-recovery testing (DESIGN.md §10).
+
+Production traffic implies machines dying mid-epoch; this repo's unfair
+advantage is that every sampling-front draw is counter-keyed on
+``(seed, epoch, batch_index, stream)`` (DESIGN.md §7), so a replacement
+trainer can re-derive *exactly* the batches a dead one would have produced.
+:class:`FaultInjector` is the other half of that story: a **seeded,
+deterministic failure schedule** that the chaos suite and the launcher's
+``--inject-fault`` flag use to make "a machine died" a reproducible event.
+
+Two failure families:
+
+* **trainer death** — ``kill_at=(epoch, batch_index)`` raises
+  :class:`TrainerDeath` from the trainer loop the moment it is about to
+  consume that batch (i.e. the batch is never trained). One-shot: after
+  firing, the injector disarms itself so a recovered run that replays
+  through the same coordinate does not die again.
+* **transient RPC errors** — ``rpc_failure_rate`` makes
+  ``Transport.charge_remote`` raise :class:`TransientRPCError` on a
+  deterministic counter-keyed schedule (per-call draw from
+  ``SeedSequence((seed, call_counter))``, same construction as the
+  sampler's per-batch RNG). ``KVClient`` retries these with exponential
+  backoff charged to the simulated clock, so injected transients change
+  accounting but **never bytes** — golden hashes are pinned by tests.
+
+``ops`` scopes injection to transport operation tags: feature/embedding
+traffic is ``"pull"``/``"push"`` (the retried paths); sampler dispatch
+charges under the default ``"data"`` tag and is only faulted when a test
+asks for it explicitly (the mid-stream pipeline-failure tests do).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+_MASK32 = 0xFFFFFFFF
+
+
+class TransientRPCError(RuntimeError):
+    """A remote call failed but may succeed on retry (network blip)."""
+
+
+class RPCRetriesExhausted(RuntimeError):
+    """A remote call kept failing past the retry budget — fatal."""
+
+
+class TrainerDeath(RuntimeError):
+    """An injected trainer loss at coordinate ``(epoch, batch_index)``.
+
+    The batch at the death coordinate was NOT trained; recovery restores
+    the latest checkpoint and replays forward through it.
+    """
+
+    def __init__(self, epoch: int, batch_index: int):
+        super().__init__(f"trainer killed at epoch {epoch}, "
+                         f"batch {batch_index} (injected fault)")
+        self.epoch = int(epoch)
+        self.batch_index = int(batch_index)
+
+
+class FaultInjector:
+    """Seeded deterministic failure schedule.
+
+    Thread-safe: the RPC draw counter is shared by every thread that
+    charges the transport (CPU-prefetch stages, embedding pushes). The
+    schedule is a pure function of ``(seed, call order)`` — two runs that
+    issue the same calls in the same order see identical faults, which is
+    what lets CI pin a fault schedule.
+    """
+
+    def __init__(self, seed: int = 0, *,
+                 kill_at: Optional[Tuple[int, int]] = None,
+                 rpc_failure_rate: float = 0.0,
+                 ops: Sequence[str] = ("pull", "push"),
+                 max_rpc_failures: Optional[int] = None):
+        if not (0.0 <= rpc_failure_rate <= 1.0):
+            raise ValueError(f"rpc_failure_rate must be in [0, 1], "
+                             f"got {rpc_failure_rate}")
+        self.seed = int(seed)
+        self.kill_at = None if kill_at is None else (int(kill_at[0]),
+                                                     int(kill_at[1]))
+        self.rpc_failure_rate = float(rpc_failure_rate)
+        self.ops = tuple(ops)
+        # cap on TOTAL injected RPC faults (None = unlimited): lets a test
+        # inject "the first k calls fail" without rate-1.0 starving retries
+        self.max_rpc_failures = max_rpc_failures
+        self._lock = threading.Lock()
+        self._rpc_calls = 0
+        self.rpc_faults_injected = 0
+        self.death_fired = False
+
+    # -- transient RPC faults -------------------------------------------
+    def rpc_should_fail(self, op: str = "data") -> bool:
+        """Deterministic per-call draw; counts every matching call."""
+        if self.rpc_failure_rate <= 0.0 or op not in self.ops:
+            return False
+        with self._lock:
+            n = self._rpc_calls
+            self._rpc_calls += 1
+            if (self.max_rpc_failures is not None
+                    and self.rpc_faults_injected >= self.max_rpc_failures):
+                return False
+            # counter-keyed, like prng.batch_rng: reproducible per call index
+            rng = np.random.default_rng(np.random.SeedSequence(
+                (self.seed & _MASK32, n & _MASK32)))
+            fail = bool(rng.random() < self.rpc_failure_rate)
+            if fail:
+                self.rpc_faults_injected += 1
+            return fail
+
+    # -- trainer death ---------------------------------------------------
+    def check_death(self, epoch: int, batch_index: int) -> None:
+        """Raise :class:`TrainerDeath` at the scheduled coordinate (once)."""
+        if self.kill_at is None or self.death_fired:
+            return
+        if (int(epoch), int(batch_index)) == self.kill_at:
+            self.death_fired = True
+            raise TrainerDeath(epoch, batch_index)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"rpc_calls_seen": self._rpc_calls,
+                    "rpc_faults_injected": self.rpc_faults_injected,
+                    "death_fired": self.death_fired,
+                    "kill_at": self.kill_at}

@@ -17,7 +17,13 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from .faults import RPCRetriesExhausted, TransientRPCError
 from .transport import Transport
+
+# transient-RPC retry budget (DESIGN.md §10): 8 attempts with doubling
+# backoff spans ~256x the base latency — a schedule that fails past it is
+# treated as a dead peer, not a blip, and surfaces RPCRetriesExhausted
+MAX_RPC_RETRIES = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,6 +192,26 @@ class DistKVStore:
         with self._version_lock:
             np.add.at(vers, np.asarray(ids, dtype=np.int64), 1)
 
+    # -- checkpoint access (repro.checkpoint save/load_kvstore) ----------
+    def mutable_names(self) -> List[str]:
+        """Tensors with a version table, in registration order."""
+        return list(self._versions)
+
+    def version_table(self, name: str) -> np.ndarray:
+        """A consistent snapshot of one tensor's full version table."""
+        with self._version_lock:
+            return self._versions[name].copy()
+
+    def set_versions(self, name: str, values: np.ndarray) -> None:
+        """Restore a tensor's exact version counters (checkpoint load):
+        cache entries saved against these versions validate again, instead
+        of the blanket bump a version-less restore must fall back to."""
+        vers = self._versions[name]
+        values = np.asarray(values, dtype=np.int64)
+        assert values.shape == vers.shape, (name, values.shape, vers.shape)
+        with self._version_lock:
+            vers[...] = values
+
     def client(self, machine: int) -> "KVClient":
         return KVClient(self, machine)
 
@@ -227,6 +253,30 @@ class KVClient:
         tensors registered with the cache take the cached read path."""
         self.cache = cache
         return self
+
+    def _charge_remote(self, nbytes: int, op: str) -> None:
+        """Charge one remote RPC, absorbing injected transient failures
+        with exponential backoff (DESIGN.md §10).
+
+        Every data-plane RPC this client issues routes through here, and
+        the charge always runs BEFORE the corresponding server mutation
+        (see ``push``) — so a retried call never re-applies a ``sum``
+        reduction, and injected transients change accounting but not one
+        byte of training state."""
+        transport = self.store.transport
+        delay = transport.model.latency_s
+        last: Optional[TransientRPCError] = None
+        for _ in range(MAX_RPC_RETRIES):
+            try:
+                transport.charge_remote(nbytes, op=op)
+                return
+            except TransientRPCError as e:
+                last = e
+                transport.charge_retry_backoff(delay)
+                delay *= 2
+        raise RPCRetriesExhausted(
+            f"{op!r} RPC ({nbytes}B) failed {MAX_RPC_RETRIES} times — "
+            f"treating the peer as dead") from last
 
     def pull(self, name: str, ids: np.ndarray, *,
              _bypass_cache: bool = False) -> np.ndarray:
@@ -271,7 +321,7 @@ class KVClient:
             if p == self.machine:
                 store.transport.charge_local(nbytes)
             else:
-                store.transport.charge_remote(nbytes)
+                self._charge_remote(nbytes, op="pull")
                 if cache is not None:
                     cache.insert(name, ids[m], rows,
                                  versions=None if pre_versions is None
@@ -291,12 +341,15 @@ class KVClient:
             m = parts == p
             if not m.any():
                 continue
-            store.servers[p].apply(name, local_ids[m], values[m], reduce=reduce)
             nbytes = int(m.sum()) * itemrow
+            # charge (and absorb transient faults) BEFORE the apply: the
+            # owner mutates exactly once per delivered request, so a
+            # retried charge can never double-apply a "sum" reduction
             if p == self.machine:
                 store.transport.charge_local(nbytes)
             else:
-                store.transport.charge_remote(nbytes)
+                self._charge_remote(nbytes, op="push")
+            store.servers[p].apply(name, local_ids[m], values[m], reduce=reduce)
         self.notify_write(name, ids)
 
     def notify_write(self, name: str, ids: np.ndarray) -> None:

@@ -15,6 +15,8 @@ import dataclasses
 import threading
 import time
 
+from .faults import TransientRPCError
+
 
 @dataclasses.dataclass
 class NetworkModel:
@@ -28,13 +30,22 @@ class NetworkModel:
 
 
 class Transport:
-    def __init__(self, model: NetworkModel | None = None):
+    def __init__(self, model: NetworkModel | None = None,
+                 fault_injector=None):
         self.model = model or NetworkModel()
+        # optional FaultInjector (kvstore.faults): charge_remote raises
+        # TransientRPCError on its deterministic schedule. None (default)
+        # keeps the fault check off the hot path entirely.
+        self.fault_injector = fault_injector
         self._lock = threading.Lock()
         self.remote_bytes = 0
         self.remote_requests = 0
         self.local_bytes = 0
         self.simulated_time_s = 0.0
+        # transient-fault accounting (kvstore.faults): injected failures
+        # and the retries/backoffs clients paid recovering from them
+        self.rpc_failures = 0
+        self.rpc_retries = 0
         # hot-vertex cache accounting (kvstore.cache): bytes a remote fetch
         # WOULD have moved but a trainer-side cache hit absorbed — the
         # paper-style traffic-reduction numerator for benchmarks
@@ -51,7 +62,18 @@ class Transport:
         with self._lock:
             self.cache_misses += rows
 
-    def charge_remote(self, nbytes: int) -> None:
+    def charge_remote(self, nbytes: int, op: str = "data") -> None:
+        inj = self.fault_injector
+        if inj is not None and inj.rpc_should_fail(op):
+            # a failed RPC still burned a round trip before the error came
+            # back; the payload bytes never moved
+            with self._lock:
+                self.rpc_failures += 1
+                self.simulated_time_s += self.model.latency_s
+            if self.model.sleep:
+                time.sleep(self.model.latency_s)
+            raise TransientRPCError(
+                f"injected transient failure on {op!r} RPC ({nbytes}B)")
         t = self.model.cost(nbytes)
         with self._lock:
             self.remote_bytes += nbytes
@@ -59,6 +81,16 @@ class Transport:
             self.simulated_time_s += t
         if self.model.sleep:
             time.sleep(t)
+
+    def charge_retry_backoff(self, delay_s: float) -> None:
+        """One retry's backoff wait, charged to the simulated clock (and
+        really slept when the model sleeps — wall-clock benches stay
+        honest about recovery cost)."""
+        with self._lock:
+            self.rpc_retries += 1
+            self.simulated_time_s += delay_s
+        if self.model.sleep:
+            time.sleep(delay_s)
 
     def charge_local(self, nbytes: int) -> None:
         with self._lock:
@@ -72,6 +104,8 @@ class Transport:
                 "remote_requests": self.remote_requests,
                 "local_bytes": self.local_bytes,
                 "simulated_network_s": self.simulated_time_s,
+                "rpc_failures": self.rpc_failures,
+                "rpc_retries": self.rpc_retries,
                 "cache_hits": self.cache_hits,
                 "cache_misses": self.cache_misses,
                 "cache_hit_rate": self.cache_hits / max(looked_up, 1),
@@ -91,6 +125,8 @@ class Transport:
             self.remote_requests = 0
             self.local_bytes = 0
             self.simulated_time_s = 0.0
+            self.rpc_failures = 0
+            self.rpc_retries = 0
             self.cache_hits = 0
             self.cache_misses = 0
             self.saved_remote_bytes = 0

@@ -45,13 +45,20 @@ def _host_blocks(mb) -> list:
 
 def _epoch_schedule(seeds: np.ndarray, labels: Optional[np.ndarray],
                     batch_size: int, rng: np.random.Generator, epoch: int,
-                    drop_last: bool = True, shuffle: bool = True):
+                    drop_last: bool = True, shuffle: bool = True,
+                    start_batch: int = 0):
     """Stage 1: uniform random batch schedule over this trainer's seed set
-    (``shuffle=False``: fixed sequential batches — inference/eval order)."""
+    (``shuffle=False``: fixed sequential batches — inference/eval order).
+
+    ``start_batch`` fast-forwards the schedule for recovery replay
+    (DESIGN.md §10): the permutation is drawn in full — identical rng
+    consumption — and only the emission is skipped, so batch k's seed
+    selection is byte-identical whether reached live or by fast-forward.
+    """
     perm = (rng.permutation(len(seeds)) if shuffle
             else np.arange(len(seeds), dtype=np.int64))
     n_batches = len(seeds) // batch_size if drop_last else -(-len(seeds) // batch_size)
-    for b in range(n_batches):
+    for b in range(start_batch, n_batches):
         sel = perm[b * batch_size:(b + 1) * batch_size]
         yield (epoch, b, seeds[sel], None if labels is None else labels[sel])
 
@@ -140,13 +147,17 @@ class MinibatchPipeline:
     def _epoch_rng(self, epoch: int) -> np.random.Generator:
         return batch_rng(self.seed, epoch, 0, STREAM_SCHEDULE)
 
-    def _schedule_source(self, epochs: Iterator[int]):
+    def _schedule_source(self, epochs: Iterator[int], start_batch: int = 0):
         for e in epochs:
             yield from _epoch_schedule(self.seeds, self.labels,
                                        self.batch_size, self._epoch_rng(e), e,
-                                       shuffle=self.shuffle)
+                                       shuffle=self.shuffle,
+                                       start_batch=start_batch)
+            # fast-forward applies to the FIRST epoch of the stream only:
+            # subsequent epochs replay from their own batch 0
+            start_batch = 0
 
-    def _build(self, epochs) -> AsyncPipeline:
+    def _build(self, epochs, start_batch: int = 0) -> AsyncPipeline:
         stages = [
             Stage("sample", self._stage_sample, depth=self.depths["sample"],
                   workers=self.sample_workers),
@@ -155,10 +166,10 @@ class MinibatchPipeline:
             Stage("device_prefetch", self._stage_device_prefetch,
                   depth=self.depths["device_prefetch"]),
         ]
-        return AsyncPipeline(self._schedule_source(epochs), stages,
-                             sync=self.sync, name="minibatch")
+        return AsyncPipeline(self._schedule_source(epochs, start_batch),
+                             stages, sync=self.sync, name="minibatch")
 
-    def epoch(self, epoch: int):
+    def epoch(self, epoch: int, start_batch: int = 0):
         """Iterate one epoch's device-ready mini-batches.
 
         Non-stop mode keeps ONE pipeline alive across epochs: the internal
@@ -171,9 +182,20 @@ class MinibatchPipeline:
         remaining batches in flight: a later ``epoch()`` call raises
         instead of serving another epoch's schedule under a stale label —
         ``stop()`` drains the in-flight work and rewinds (the loader
-        façade in ``repro.api`` does exactly that on early ``close()``)."""
+        façade in ``repro.api`` does exactly that on early ``close()``).
+
+        ``start_batch=k`` is the recovery fast-forward (DESIGN.md §10):
+        the epoch's full schedule is derived as usual — identical rng
+        consumption — but emission begins at batch k, so a revived trainer
+        resumes exactly at its death coordinate with byte-identical
+        batches. Only valid on a fresh pipeline: batches already in
+        flight were scheduled from batch 0."""
         if self.non_stop and not self.sync:
             with self._lock:
+                if start_batch and self._pipe is not None:
+                    raise ValueError(
+                        "fast-forward (start_batch != 0) requires a fresh "
+                        "pipeline — stop() before recovering")
                 if (self._pipe is not None
                         and self._epoch_pos not in (0, self.batches_per_epoch)):
                     raise ValueError(
@@ -190,7 +212,7 @@ class MinibatchPipeline:
                         while True:
                             yield e
                             e += 1
-                    self._pipe = self._build(forever())
+                    self._pipe = self._build(forever(), start_batch)
                     self._out_iter = iter(self._pipe)
                 elif epoch != self._nonstop_epoch:
                     raise ValueError(
@@ -198,8 +220,8 @@ class MinibatchPipeline:
                         f"expected epoch {self._nonstop_epoch}, got {epoch} "
                         f"(stop() the pipeline to rewind or skip)")
                 self._nonstop_epoch = epoch + 1
-                self._epoch_pos = 0
-            for _ in range(self.batches_per_epoch):
+                self._epoch_pos = start_batch
+            for _ in range(self.batches_per_epoch - start_batch):
                 item = next(self._out_iter)
                 # count at pull time: once off the stream, the stream is
                 # past it — a consumer that stops right after taking the
@@ -207,7 +229,7 @@ class MinibatchPipeline:
                 self._epoch_pos += 1
                 yield item
         else:
-            pipe = self._build(iter([epoch]))
+            pipe = self._build(iter([epoch]), start_batch)
             self._pipe = pipe
             yield from pipe
 
@@ -263,6 +285,8 @@ class EdgeMinibatchPipeline(MinibatchPipeline):
         return emb, device_stage(tree, packed=self.packed)
 
     # ---- driving ------------------------------------------------------
-    def _schedule_source(self, epochs):
+    def _schedule_source(self, epochs, start_batch: int = 0):
         for e in epochs:
-            yield from self.edge_sampler.schedule(self._epoch_rng(e), e)
+            yield from self.edge_sampler.schedule(self._epoch_rng(e), e,
+                                                  start_batch=start_batch)
+            start_batch = 0

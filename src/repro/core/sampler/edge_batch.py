@@ -351,12 +351,18 @@ class EdgeBatchSampler:
     def batches_per_epoch(self) -> int:
         return sum(len(p) // self.batch_edges for p in self._etype_pools)
 
-    def schedule(self, rng: np.random.Generator, epoch: int
-                 ) -> Iterator[tuple]:
+    def schedule(self, rng: np.random.Generator, epoch: int,
+                 start_batch: int = 0) -> Iterator[tuple]:
         """Stage 1 for edges: permute each relation's owned positives, cut
         into fixed-size batches, shuffle the batch order across relations.
         Untyped runs have one pool (relation -1). Drop-last per pool, like
-        the node schedule."""
+        the node schedule.
+
+        ``start_batch`` fast-forwards for recovery replay (DESIGN.md §10):
+        every permutation is drawn in full — identical rng consumption —
+        and only the first ``start_batch`` emissions are skipped, so the
+        surviving batches (including their schedule-position-keyed
+        negative sampling) are byte-identical to a live run's."""
         B = self.batch_edges
         batches: List[tuple[int, np.ndarray]] = []
         for r, pool in enumerate(self._etype_pools):
@@ -364,7 +370,8 @@ class EdgeBatchSampler:
             for b in range(len(pool) // B):
                 batches.append((r if self.typed else -1,
                                 pool[perm[b * B:(b + 1) * B]]))
-        for b in rng.permutation(len(batches)):
+        order = rng.permutation(len(batches))
+        for b in order[start_batch:]:
             et, eids = batches[int(b)]
             yield (epoch, int(b), et, eids)
 

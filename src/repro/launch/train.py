@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 
@@ -24,8 +25,22 @@ def run_gnn(args):
     import jax
     from ..configs import get_config
     from ..graph import get_dataset
-    from ..api import DistGNNTrainer, TrainJobConfig
+    from ..api import (DistGNNTrainer, FaultInjector, TrainJobConfig,
+                       TrainerDeath)
     from ..core.kvstore import CacheConfig, NetworkModel
+
+    kill_at = None
+    if args.inject_fault:
+        try:
+            e, _, b = args.inject_fault.partition(":")
+            kill_at = (int(e), int(b))
+        except ValueError:
+            raise SystemExit(f"--inject-fault expects EPOCH:BATCH, "
+                             f"got {args.inject_fault!r}")
+    if (kill_at or args.recover or args.checkpoint_interval) \
+            and not args.checkpoint_dir:
+        raise SystemExit("--inject-fault / --recover / "
+                         "--checkpoint-interval need --checkpoint-dir")
 
     cfg = get_config(args.arch)
     ds = get_dataset(args.dataset, scale=args.scale)
@@ -67,6 +82,10 @@ def run_gnn(args):
     cache = (CacheConfig.from_mb(args.cache_budget_mb,
                                  policy=args.cache_policy)
              if args.cache_budget_mb > 0 else None)
+    injector = None
+    if kill_at or args.rpc_fault_rate:
+        injector = FaultInjector(seed=args.fault_seed, kill_at=kill_at,
+                                 rpc_failure_rate=args.rpc_fault_rate)
     job = TrainJobConfig(
         num_machines=args.machines,
         trainers_per_machine=args.trainers_per_machine,
@@ -77,16 +96,53 @@ def run_gnn(args):
         sample_workers=args.sample_workers,
         packed_staging=not args.no_packed_staging,
         impl=args.impl,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_interval=args.checkpoint_interval,
+        fault_injector=injector,
         network=NetworkModel(sleep=args.simulate_network))
     tr = DistGNNTrainer(ds, cfg, job)
     print(f"[train] {args.arch}/{args.task} on {args.dataset}: "
           f"{tr.num_trainers} trainers, {tr.batches_per_epoch} batches/epoch, "
           f"seed locality {tr.locality['mean_local_frac']:.2f}")
     metric = "mrr" if args.task == "link_prediction" else "acc"
-    for e in range(args.epochs):
-        m = tr.train_epoch(e)
+    e = 0
+    if args.recover:
+        meta = tr.recover(args.checkpoint_dir)
+        e = meta["epoch"]
+        print(f"[recover] resuming at epoch {e}, "
+              f"batch {meta['batch_index']} (global step "
+              f"{meta['global_step']}) from {args.checkpoint_dir}")
+    while e < args.epochs:
+        try:
+            m = tr.train_epoch(e)
+        except TrainerDeath as death:
+            # elastic recovery (DESIGN.md §10): the dead trainer's world is
+            # torn down and a replacement is built from the same job spec
+            # (sans injector — the fault schedule already fired), restored
+            # from the last consistent checkpoint, and fast-forwarded to
+            # its coordinate. Training resumes byte-identically.
+            print(f"[fault] trainer killed at epoch {death.epoch}, "
+                  f"batch {death.batch_index} — reviving from checkpoint")
+            tr.stop()
+            if not os.path.exists(os.path.join(args.checkpoint_dir,
+                                               "state.json")):
+                print("[recover] no checkpoint written yet — "
+                      "restarting from epoch 0")
+                tr = DistGNNTrainer(ds, cfg, dataclasses.replace(
+                    job, fault_injector=None))
+                e = 0
+                continue
+            t0 = time.perf_counter()
+            tr = DistGNNTrainer(ds, cfg, dataclasses.replace(
+                job, fault_injector=None))
+            meta = tr.recover(args.checkpoint_dir)
+            e = meta["epoch"]
+            print(f"[recover] {time.perf_counter() - t0:.2f}s — resuming "
+                  f"at epoch {e}, batch {meta['batch_index']}")
+            continue
         print(f"[epoch {e}] loss={m['loss']:.4f} {metric}={m['acc']:.3f} "
               f"time={m['time_s']:.2f}s")
+        e += 1
     if args.task == "link_prediction":
         val = tr.evaluate_lp()
         print(f"[final] val_mrr={val['mrr']:.3f} "
@@ -202,6 +258,29 @@ def build_parser() -> argparse.ArgumentParser:
                     help="sampling-stage worker threads per trainer "
                          "(batches are byte-identical for any value; "
                          "see DESIGN.md §7)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for consistent training checkpoints "
+                         "(params + optimizer + KVStore shards with row "
+                         "versions + cache snapshots; DESIGN.md §10)")
+    ap.add_argument("--checkpoint-interval", type=int, default=0,
+                    help="global steps between checkpoints (0 disables; "
+                         "needs --checkpoint-dir)")
+    ap.add_argument("--recover", action="store_true",
+                    help="restore the --checkpoint-dir checkpoint before "
+                         "training and fast-forward the deterministic "
+                         "schedule to its (epoch, batch) coordinate")
+    ap.add_argument("--inject-fault", metavar="EPOCH:BATCH", default=None,
+                    help="chaos testing: kill the trainer right before "
+                         "consuming this batch, then auto-revive a "
+                         "replacement from the last checkpoint "
+                         "(byte-identical resumed training)")
+    ap.add_argument("--rpc-fault-rate", type=float, default=0.0,
+                    help="chaos testing: probability each feature/gradient "
+                         "RPC fails transiently (retried with backoff; "
+                         "bytes are unchanged by retries)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the injected failure schedule "
+                         "(deterministic chaos)")
     ap.add_argument("--smoke", action="store_true",
                     help="LM: reduced same-family config for CPU smoke runs")
     ap.add_argument("--sync", action="store_true",

@@ -1,0 +1,193 @@
+"""Checkpoint layer: save/load round-trips must be bitwise, and restores
+must be strict — a checkpoint that does not match its template raises
+instead of silently coercing (DESIGN.md §10)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (load_cache, load_kvstore, load_pytree,
+                              save_cache, save_kvstore, save_pytree)
+from repro.core.kvstore import (CacheConfig, DistEmbedding, DistKVStore,
+                                FeatureCache, PartitionPolicy)
+
+
+# ---- pytree round-trips -------------------------------------------------
+
+def _tree(rng):
+    """One pytree spanning the dtypes a train state actually holds."""
+    return {
+        "w": rng.standard_normal((4, 3)).astype(np.float32),
+        "step": np.int64(7),
+        "mask": rng.random(5) > 0.5,                       # bool leaf
+        "acc": rng.standard_normal(6).astype(np.float64),  # x64 leaf
+        "nested": [rng.standard_normal(2).astype(np.float32),
+                   np.arange(3, dtype=np.int32)],
+    }
+
+
+def test_pytree_roundtrip_bitwise(tmp_path):
+    rng = np.random.default_rng(0)
+    tree = _tree(rng)
+    save_pytree(tree, str(tmp_path))
+    other = _tree(np.random.default_rng(1))    # template: same structure,
+    out = load_pytree(other, str(tmp_path))    # different values
+    import jax
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype
+        assert a.tobytes() == b.tobytes()      # bitwise, not allclose
+
+
+def test_pytree_dtype_mismatch_raises(tmp_path):
+    save_pytree({"w": np.ones(3, np.float64)}, str(tmp_path))
+    with pytest.raises(ValueError, match="dtype"):
+        load_pytree({"w": np.ones(3, np.float32)}, str(tmp_path))
+
+
+def test_pytree_explicit_cast_coerces(tmp_path):
+    save_pytree({"w": np.arange(3, dtype=np.float64) + 0.5}, str(tmp_path))
+    out = load_pytree({"w": np.zeros(3, np.float32)}, str(tmp_path),
+                      cast=True)
+    assert out["w"].dtype == np.float32
+    np.testing.assert_allclose(out["w"], [0.5, 1.5, 2.5])
+
+
+def test_pytree_shape_mismatch_raises_even_with_cast(tmp_path):
+    save_pytree({"w": np.ones((2, 3), np.float32)}, str(tmp_path))
+    with pytest.raises(ValueError, match="shape"):
+        load_pytree({"w": np.ones((3, 2), np.float32)}, str(tmp_path),
+                    cast=True)
+
+
+def test_pytree_missing_leaf_raises(tmp_path):
+    save_pytree({"a": np.ones(2, np.float32)}, str(tmp_path))
+    with pytest.raises(KeyError, match="missing"):
+        load_pytree({"a": np.ones(2, np.float32),
+                     "b": np.ones(2, np.float32)}, str(tmp_path))
+
+
+def test_pytree_extra_leaf_raises(tmp_path):
+    save_pytree({"a": np.ones(2, np.float32),
+                 "b": np.ones(2, np.float32)}, str(tmp_path))
+    with pytest.raises(KeyError, match="leaves the template"):
+        load_pytree({"a": np.ones(2, np.float32)}, str(tmp_path))
+
+
+def test_pytree_corrupt_manifest_raises(tmp_path):
+    save_pytree({"a": np.ones(2, np.float32)}, str(tmp_path))
+    with open(os.path.join(str(tmp_path), "manifest.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(ValueError):   # json.JSONDecodeError is a ValueError
+        load_pytree({"a": np.ones(2, np.float32)}, str(tmp_path))
+    assert issubclass(json.JSONDecodeError, ValueError)
+
+
+# ---- KVStore shards + row versions --------------------------------------
+
+@pytest.fixture
+def world():
+    pol = PartitionPolicy("node", np.array([0, 10, 25, 40]))
+    s = DistKVStore({"node": pol})
+    full = np.arange(40 * 3, dtype=np.float32).reshape(40, 3)
+    s.init_data("feat", (3,), np.float32, "node", full_array=full)
+    emb = DistEmbedding(s, "emb", 40, 4, "node", seed=3)
+    return s, emb
+
+
+def test_kvstore_roundtrip_with_versions(tmp_path, world):
+    s, emb = world
+    c = s.client(0)
+    # advance the mutable table so versions are non-trivial
+    emb.push_grad(c, np.array([1, 17, 30]), np.ones((3, 4), np.float32))
+    w_ref = s.gather_all("emb").copy()
+    f_ref = s.gather_all("feat").copy()
+    v_ref = s.version_table("emb").copy()
+    assert v_ref.max() > 0
+    save_kvstore(s, str(tmp_path))
+
+    # diverge: more pushes + a feature overwrite
+    emb.push_grad(c, np.array([1, 5]), np.ones((2, 4), np.float32))
+    c.push("feat", np.array([0]), np.full((1, 3), -9, np.float32),
+           reduce="assign")
+    assert not np.array_equal(s.version_table("emb"), v_ref)
+
+    load_kvstore(s, str(tmp_path))
+    assert s.gather_all("emb").tobytes() == w_ref.tobytes()
+    assert s.gather_all("feat").tobytes() == f_ref.tobytes()
+    # versions restore EXACTLY (not bumped past) — the cache-snapshot
+    # validity contract (DESIGN.md §10)
+    assert np.array_equal(s.version_table("emb"), v_ref)
+    # optimizer state rides along with the shards
+    assert int(s.servers[0].local_view("emb__t")[1]) == 1
+
+
+def test_kvstore_restore_flushes_live_caches(tmp_path, world):
+    s, emb = world
+    cache = FeatureCache(CacheConfig.from_mb(1.0), store=s)
+    cache.register(s, "feat")
+    save_kvstore(s, str(tmp_path))
+    rows = s.client(0).pull("feat", np.array([30, 31]))
+    cache.insert("feat", np.array([30, 31]), rows, force=True)
+    assert cache.lookup("feat", np.array([30]))[0].all()
+    load_kvstore(s, str(tmp_path))   # a restore is a write like any other
+    hit, _ = cache.lookup("feat", np.array([30, 31]))
+    assert not hit.any()
+
+
+# ---- FeatureCache snapshots ---------------------------------------------
+
+def test_cache_state_roundtrip(tmp_path, world):
+    s, emb = world
+    c = s.client(0)
+    emb.push_grad(c, np.array([2, 12]), np.ones((2, 4), np.float32))
+
+    cache = FeatureCache(CacheConfig.from_mb(1.0), store=s)
+    cache.register(s, "feat")
+    cache.register(s, "emb")
+    f_ids = np.array([11, 26, 35])
+    e_ids = np.array([2, 12, 33])
+    cache.insert("feat", f_ids, c.pull("feat", f_ids), force=True)
+    cache.insert("emb", e_ids, c.pull("emb", e_ids), force=True)
+    kv_dir, cache_dir = str(tmp_path / "kv"), str(tmp_path / "cache")
+    save_kvstore(s, kv_dir)
+    save_cache(cache, cache_dir)
+    f_rows = cache.lookup("feat", f_ids)[1].copy()
+    e_rows = cache.lookup("emb", e_ids)[1].copy()
+
+    # a fresh trainer's empty cache, restored from the paired checkpoint
+    cache2 = FeatureCache(CacheConfig.from_mb(1.0), store=s)
+    cache2.register(s, "feat")
+    cache2.register(s, "emb")
+    load_kvstore(s, kv_dir)          # restores the version tables first
+    admitted = load_cache(cache2, cache_dir)
+    assert admitted == 6
+    hit_f, rows_f = cache2.lookup("feat", f_ids)
+    hit_e, rows_e = cache2.lookup("emb", e_ids)
+    assert hit_f.all() and hit_e.all()
+    assert rows_f.tobytes() == f_rows.tobytes()
+    assert rows_e.tobytes() == e_rows.tobytes()
+
+
+def test_cache_snapshot_refused_when_versions_moved(tmp_path, world):
+    """A snapshot paired with checkpoint T must not be admitted against a
+    store whose rows moved past T — stale rows are refused per-row."""
+    s, emb = world
+    c = s.client(0)
+    cache = FeatureCache(CacheConfig.from_mb(1.0), store=s)
+    cache.register(s, "emb")
+    ids = np.array([4, 21])
+    cache.insert("emb", ids, c.pull("emb", ids), force=True)
+    cache_dir = str(tmp_path / "cache")
+    save_cache(cache, cache_dir)
+
+    # the store moves on WITHOUT a matching kvstore restore
+    emb.push_grad(c, np.array([4]), np.ones((1, 4), np.float32))
+    cache2 = FeatureCache(CacheConfig.from_mb(1.0), store=s)
+    cache2.register(s, "emb")
+    admitted = load_cache(cache2, cache_dir)
+    assert admitted == 1             # row 21 still valid, row 4 refused
+    hit, _ = cache2.lookup("emb", ids)
+    assert hit.tolist() == [False, True]

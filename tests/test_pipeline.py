@@ -5,8 +5,9 @@ import pytest
 
 from repro.core.pipeline import AsyncPipeline, Stage
 from repro.core.pipeline.minibatch import MinibatchPipeline
-from repro.core.kvstore import (DistKVStore, NetworkModel, PartitionPolicy,
-                                Transport)
+from repro.core.kvstore import (DistKVStore, FaultInjector, NetworkModel,
+                                PartitionPolicy, Transport,
+                                TransientRPCError)
 from repro.core.partition import hierarchical_partition, split_training_set
 from repro.core.sampler import DistributedSampler
 from repro.graph import get_dataset
@@ -294,3 +295,102 @@ def test_pipeline_feature_correctness(world):
     for mb in pipe.epoch(0):
         assert np.allclose(mb.input_feats, feats_new[mb.input_gids])
         break
+
+
+# ---- injected mid-stream stage failures (DESIGN.md §10) -------------------
+
+def _fault_world():
+    """A private world per test: these tests poison the shared transport
+    with a fault injector, so they must never touch the module fixture."""
+    ds = get_dataset("product-sim", scale=10)
+    hp = hierarchical_partition(ds.graph, 2, 1, split_mask=ds.split_mask,
+                                seed=0)
+    book = hp.book
+    feats_new = ds.feats[book.new2old_node]
+    labels_new = ds.labels[book.new2old_node]
+    tp = Transport(NetworkModel(sleep=True, latency_s=2e-3,
+                                bandwidth_Bps=1e9))
+    store = DistKVStore({"node": PartitionPolicy("node", book.node_offsets)},
+                        transport=tp)
+    store.init_data("feat", feats_new.shape[1:], np.float32, "node",
+                    full_array=feats_new)
+    train_new = book.old2new_node[ds.train_nids]
+    seeds = split_training_set(hp, train_new)[0]
+    return hp, store, tp, seeds, labels_new
+
+
+@pytest.mark.parametrize("workers", [2, 4])
+def test_pool_worker_fault_drains_cleanly(workers):
+    """An injected fault inside a pool worker mid-way through a NON-STOP
+    schedule must surface to the consumer, stop the sibling workers, and
+    leave zero pipeline threads after ``stop()`` — a crashed sampling
+    worker must never wedge or leak the trainer's pipeline."""
+    import threading
+    hp, store, tp, seeds, labels_new = _fault_world()
+    # ops=("data",): fault the sampler-dispatch RPCs, i.e. the SAMPLE
+    # stage's own traffic (that path is deliberately not retried — only
+    # pull/push are, so the fault surfaces as a worker crash)
+    tp.fault_injector = FaultInjector(seed=2, rpc_failure_rate=1.0,
+                                      ops=("data",),)
+    sampler = DistributedSampler(hp.book, hp.partitions, [10, 5], 32,
+                                 machine=0, transport=tp, seed=0)
+    pipe = MinibatchPipeline(sampler, store.client(0), "feat", seeds,
+                             labels=labels_new[seeds], non_stop=True,
+                             to_device=False, seed=1,
+                             sample_workers=workers)
+    with pytest.raises(TransientRPCError):
+        for _ in pipe.epoch(0):
+            pass
+    pipe.stop()
+    leaked = [t.name for t in threading.enumerate()
+              if t.name.startswith("minibatch")]
+    assert not leaked, f"pipeline threads leaked after fault: {leaked}"
+
+
+@pytest.mark.parametrize("workers", [2, 4])
+def test_pool_worker_fault_stops_siblings(workers):
+    """After one sampling worker crashes, siblings must stop issuing
+    dispatch RPCs (their side effects would pollute transport accounting)
+    instead of burning through the rest of the non-stop schedule."""
+    hp, store, tp, seeds, labels_new = _fault_world()
+    tp.fault_injector = FaultInjector(seed=2, rpc_failure_rate=1.0,
+                                      ops=("data",))
+    sampler = DistributedSampler(hp.book, hp.partitions, [10, 5], 32,
+                                 machine=0, transport=tp, seed=0)
+    pipe = MinibatchPipeline(sampler, store.client(0), "feat", seeds,
+                             labels=labels_new[seeds], non_stop=True,
+                             to_device=False, seed=1,
+                             sample_workers=workers)
+    with pytest.raises(TransientRPCError):
+        for _ in pipe.epoch(0):
+            pass
+    time.sleep(0.3)                   # grace for siblings to notice
+    n_then = tp.rpc_failures
+    time.sleep(0.3)
+    # each worker may finish the item it already held, nothing more
+    assert tp.rpc_failures <= n_then + workers, \
+        "sampling workers kept issuing RPCs after a sibling's fault"
+    pipe.stop()
+
+
+def test_pipeline_fault_free_run_unaffected_by_armed_injector():
+    """An attached injector with a zero rate (or out-of-scope ops) is
+    inert: batch bytes and transport accounting match a run with no
+    injector at all — the golden hashes cannot move."""
+    outs = []
+    for inj in (None, FaultInjector(seed=9, rpc_failure_rate=0.0),
+                FaultInjector(seed=9, rpc_failure_rate=1.0,
+                              ops=("never",))):
+        hp, store, tp, seeds, labels_new = _fault_world()
+        tp.fault_injector = inj
+        sampler = DistributedSampler(hp.book, hp.partitions, [5, 3], 16,
+                                     machine=0, transport=tp, seed=0)
+        pipe = MinibatchPipeline(sampler, store.client(0), "feat", seeds,
+                                 labels=labels_new[seeds], non_stop=False,
+                                 to_device=False, seed=1)
+        got = [(mb.input_gids.tobytes(), mb.input_feats.tobytes())
+               for mb in pipe.epoch(0)]
+        pipe.stop()
+        assert tp.rpc_failures == 0 and tp.rpc_retries == 0
+        outs.append(got)
+    assert outs[0] == outs[1] == outs[2]

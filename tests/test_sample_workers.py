@@ -296,3 +296,161 @@ def test_nonstop_pipeline_rejects_non_consecutive_epochs(homo_world):
     again = list(pipe.epoch(0))
     assert all(mb.epoch == 0 for mb in again)
     pipe.stop()
+
+
+# ---------------------------------------------------------------------------
+# recovery fast-forward (DESIGN.md §10): epoch(e, start_batch=k) must serve
+# byte-for-byte the same suffix a live run serves from position k
+# ---------------------------------------------------------------------------
+
+def _node_batch_digest(mb) -> str:
+    h = hashlib.sha256()
+    for b in mb.blocks:
+        for arr in (b.src_gids, b.edge_src, b.edge_dst, b.edge_mask,
+                    b.edge_types):
+            h.update(np.ascontiguousarray(arr).tobytes())
+    h.update(mb.seeds.tobytes())
+    h.update(mb.seed_mask.tobytes())
+    h.update(np.int64([mb.epoch, mb.batch_index]).tobytes())
+    h.update(np.ascontiguousarray(mb.input_feats).tobytes())
+    return h.hexdigest()
+
+
+def _edge_batch_digest(emb) -> str:
+    h = hashlib.sha256()
+    for b in emb.blocks:
+        for arr in (b.src_gids, b.edge_src, b.edge_dst, b.edge_mask,
+                    b.edge_types):
+            h.update(np.ascontiguousarray(arr).tobytes())
+    for arr in (emb.mb.seeds, emb.pos_eids, emb.pos_src, emb.pos_dst,
+                emb.neg_dst, emb.neg_v, emb.edge_etypes, emb.pair_mask):
+        h.update(np.ascontiguousarray(arr).tobytes())
+    h.update(np.ascontiguousarray(emb.input_feats).tobytes())
+    return h.hexdigest()
+
+
+def test_node_fast_forward_matches_live_suffix(homo_world):
+    ds, hp, store = homo_world
+    book = hp.book
+    seeds = book.old2new_node[ds.train_nids][:256]
+    labels_new = ds.labels[book.new2old_node]
+
+    def pipe():
+        s = DistributedSampler(book, hp.partitions, [10, 5], 32, machine=0,
+                               seed=55)
+        return MinibatchPipeline(s, store.client(0), "feat", seeds,
+                                 labels=labels_new[seeds], non_stop=True,
+                                 to_device=False, seed=56, sample_workers=2)
+
+    live = pipe()
+    full = [_node_batch_digest(mb) for mb in live.epoch(0)]
+    live.stop()
+    n = len(full)
+    assert n >= 3
+    for k in (1, n // 2, n - 1):
+        ff = pipe()
+        suffix = [_node_batch_digest(mb)
+                  for mb in ff.epoch(0, start_batch=k)]
+        ff.stop()
+        assert suffix == full[k:], f"fast-forward to batch {k} diverged"
+
+
+def test_edge_fast_forward_matches_live_suffix(homo_world):
+    ds, hp, store = homo_world
+    book = hp.book
+    e_src, e_dst = edge_endpoints(book, ds.graph)
+    owned = np.arange(int(book.edge_offsets[0]), int(book.edge_offsets[1]),
+                      dtype=np.int64)[:256]
+
+    def pipe():
+        B, K = 32, 3
+        s = DistributedSampler(book, hp.partitions, [5, 5],
+                               EdgeBatchSampler.required_node_batch(B, K),
+                               machine=0, seed=65)
+        es = EdgeBatchSampler(s, e_src, e_dst, owned, B, K, seed=66)
+        return EdgeMinibatchPipeline(es, store.client(0), "feat",
+                                     non_stop=True, to_device=False,
+                                     seed=67, sample_workers=2)
+
+    live = pipe()
+    full = [_edge_batch_digest(emb) for emb in live.epoch(0)]
+    live.stop()
+    n = len(full)
+    assert n >= 3
+    for k in (1, n // 2, n - 1):
+        ff = pipe()
+        suffix = [_edge_batch_digest(emb)
+                  for emb in ff.epoch(0, start_batch=k)]
+        ff.stop()
+        assert suffix == full[k:], f"edge fast-forward to batch {k} diverged"
+
+
+def test_fast_forward_spans_epoch_boundary(homo_world):
+    """Only the FIRST epoch of a fast-forwarded non-stop stream is
+    truncated; the next epoch replays in full from its own batch 0."""
+    ds, hp, store = homo_world
+    book = hp.book
+    seeds = book.old2new_node[ds.train_nids][:128]
+
+    def pipe():
+        s = DistributedSampler(book, hp.partitions, [5], 32, machine=0,
+                               seed=75)
+        return MinibatchPipeline(s, store.client(0), "feat", seeds,
+                                 non_stop=True, to_device=False, seed=76)
+
+    live = pipe()
+    e0 = [_node_batch_digest(mb) for mb in live.epoch(0)]
+    e1 = [_node_batch_digest(mb) for mb in live.epoch(1)]
+    live.stop()
+
+    ff = pipe()
+    assert ([_node_batch_digest(mb) for mb in ff.epoch(0, start_batch=2)]
+            == e0[2:])
+    assert [_node_batch_digest(mb) for mb in ff.epoch(1)] == e1
+    ff.stop()
+
+
+def test_typed_edge_schedule_fast_forward(hetero_world):
+    """Scheduler-level check on the typed path: identical rng consumption,
+    emission sliced — the surviving (etype, eids) batches match exactly."""
+    ds, hp, typed, store = hetero_world
+    book = hp.book
+    e_src, e_dst = edge_endpoints(book, ds.graph)
+    owned = np.arange(int(book.edge_offsets[0]), int(book.edge_offsets[1]),
+                      dtype=np.int64)[:256]
+    B, K = 8, 2
+    s = DistributedSampler(book, hp.partitions, [dict(FANOUTS_TYPED)] * 2,
+                           EdgeBatchSampler.required_node_batch(B, K),
+                           machine=0, seed=85, schema=ds.schema,
+                           ntype_of_node=typed.ntype_of_node)
+    es = EdgeBatchSampler(s, e_src, e_dst, owned, B, K,
+                          etype_of_edge=typed.etype_of_edge,
+                          schema=ds.schema,
+                          neg_pools=[typed.type2node[ds.schema.dst_ntype_id(r)]
+                                     for r in range(ds.schema.num_etypes)],
+                          seed=86)
+    rng = np.random.default_rng(7)
+    full = [(e, b, et, eids.tolist())
+            for e, b, et, eids in es.schedule(rng, 3)]
+    assert len(full) >= 3
+    for k in (1, len(full) // 2, len(full) - 1):
+        rng2 = np.random.default_rng(7)
+        tail = [(e, b, et, eids.tolist())
+                for e, b, et, eids in es.schedule(rng2, 3, start_batch=k)]
+        assert tail == full[k:]
+
+
+def test_fast_forward_requires_fresh_nonstop_pipeline(homo_world):
+    ds, hp, store = homo_world
+    book = hp.book
+    seeds = book.old2new_node[ds.train_nids][:128]
+    s = DistributedSampler(book, hp.partitions, [5], 32, machine=0, seed=95)
+    pipe = MinibatchPipeline(s, store.client(0), "feat", seeds,
+                             non_stop=True, to_device=False, seed=96)
+    list(pipe.epoch(0))                   # pipeline is now live
+    with pytest.raises(ValueError, match="fresh"):
+        next(pipe.epoch(1, start_batch=1))
+    pipe.stop()                           # rewound: fast-forward is legal
+    assert len(list(pipe.epoch(1, start_batch=1))) \
+        == pipe.batches_per_epoch - 1
+    pipe.stop()
