@@ -19,7 +19,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 BENCHES = ["fig1", "fig2", "fig10", "fig12", "fig13", "fig14", "table2",
-           "sampling", "kernels", "recovery", "roofline"]
+           "sampling", "kernels", "recovery", "serving", "roofline"]
 
 
 def bench_roofline():
@@ -65,6 +65,7 @@ def main() -> None:
                     "sampling": "sampling_micro",
                     "kernels": "kernels_micro",
                     "recovery": "recovery_bench",
+                    "serving": "serving_bench",
                 }[name]
                 __import__(f"benchmarks.{mod}", fromlist=["run"]).run()
         except Exception:

@@ -1,0 +1,144 @@
+"""Online-serving benchmark: emits ``BENCH_serving.json`` so the serving
+latency/throughput trajectory accumulates in CI.
+
+Two experiments over :class:`repro.api.InferenceServer`:
+
+  * **rate sweep** — open-loop Poisson request load at increasing rates;
+    per rate: p50/p99 request latency, delivered throughput, and mean
+    micro-batch tick occupancy (the §2-block coalescing the window buys
+    as load grows).
+  * **cache warm vs cold** — identical request trace against a server
+    with NO feature cache versus one whose long-lived cache has already
+    served the trace once, on a transport that really sleeps per remote
+    RPC (``NetworkModel(sleep=True)``). Warm p50 must come in below cold
+    p50 — remote feature pulls leave the request critical path.
+
+Run:  PYTHONPATH=src python -m benchmarks.serving_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.api import DistGraph, InferenceServer
+from repro.core.kvstore import CacheConfig, NetworkModel
+from repro.graph import get_dataset
+from repro.models.gnn import GNNConfig, init_gnn
+
+from .common import csv_line
+
+
+def _world(scale: int, network: NetworkModel = None):
+    ds = get_dataset("product-sim", scale=scale)
+    cfg = GNNConfig(arch="graphsage", in_dim=ds.feats.shape[1],
+                    hidden_dim=16, num_classes=ds.num_classes,
+                    fanouts=[3, 2], batch_size=8)
+    g = DistGraph(ds, num_machines=2, trainers_per_machine=1, seed=0,
+                  network=network)
+    params = init_gnn(cfg, jax.random.PRNGKey(0))
+    return g, cfg, params
+
+
+def _trace(rng, n_req: int, rate: float, num_nodes: int):
+    return (rng.exponential(1.0 / rate, size=n_req),
+            rng.integers(0, num_nodes, size=(n_req, 1)))
+
+
+def _drive(srv: InferenceServer, gaps, nids) -> dict:
+    """Replay one open-loop trace; per-request latency percentiles."""
+    handles = []
+    t0 = time.perf_counter()
+    for gap, req in zip(gaps, nids):
+        time.sleep(float(gap))
+        handles.append(srv.submit(req))
+    for h in handles:
+        h.result(timeout=300)
+    wall = time.perf_counter() - t0
+    lat = np.sort([h.latency_s for h in handles])
+    n = len(lat)
+    return {"requests": n,
+            "throughput_req_s": round(n / wall, 1),
+            "p50_ms": round(float(lat[n // 2]) * 1e3, 3),
+            "p99_ms": round(float(lat[min(n - 1, int(n * 0.99))]) * 1e3,
+                            3)}
+
+
+def run(scale: int = 10, out_path: str = "BENCH_serving.json",
+        smoke: bool = False) -> dict:
+    if smoke:
+        scale = min(scale, 10)
+    n_req = 16 if smoke else 48
+    rng = np.random.default_rng(0)
+
+    # -- rate sweep (warm cache, compute-bound transport) ---------------
+    rates = [50.0, 400.0] if smoke else [50.0, 200.0, 800.0]
+    g, cfg, params = _world(scale)
+    sweep = []
+    with InferenceServer(g, cfg, params, cache=CacheConfig.from_mb(4),
+                         micro_batch_capacity=8,
+                         micro_batch_window_ms=2.0) as srv:
+        srv.predict([0])                      # compile outside the window
+        for rate in rates:
+            gaps, nids = _trace(rng, n_req, rate, g.num_nodes())
+            srv.predict(nids[0])              # touch trace rows once
+            row = {"rate_req_s": rate, **_drive(srv, gaps, nids),
+                   "mean_tick_occupancy": round(
+                       srv.stats()["mean_tick_occupancy"], 2)}
+            sweep.append(row)
+            csv_line(f"serving/rate_{int(rate)}", row["p50_ms"] * 1e3,
+                     f"p99_ms={row['p99_ms']};"
+                     f"tput={row['throughput_req_s']}")
+
+    # -- cache warm vs cold (transport really sleeps per remote RPC) ----
+    net = NetworkModel(latency_s=5e-3, sleep=True)
+    rate = 200.0
+    gaps, nids = _trace(np.random.default_rng(1), n_req, rate,
+                        g.num_nodes())
+    g2, cfg2, params2 = _world(scale, network=net)
+    with InferenceServer(g2, cfg2, params2, cache=None) as srv:
+        srv.predict(nids[0])
+        cold = _drive(srv, gaps, nids)
+    g3, cfg3, params3 = _world(scale, network=net)
+    with InferenceServer(g3, cfg3, params3,
+                         cache=CacheConfig.from_mb(4)) as srv:
+        _drive(srv, np.zeros_like(gaps), nids)   # warm the cache in place
+        srv.cache.reset_stats()
+        warm = _drive(srv, gaps, nids)
+        hit = srv.cache.stats()
+        warm["cache_hit_rate"] = round(
+            hit["hits"] / max(hit["hits"] + hit["misses"], 1), 4)
+    csv_line("serving/cold_p50", cold["p50_ms"] * 1e3,
+             f"p99_ms={cold['p99_ms']}")
+    csv_line("serving/warm_p50", warm["p50_ms"] * 1e3,
+             f"p99_ms={warm['p99_ms']};hit={warm['cache_hit_rate']}")
+
+    result = {"config": {"scale": scale, "smoke": smoke, "n_req": n_req,
+                         "rpc_latency_ms": net.latency_s * 1e3,
+                         "backend": jax.default_backend()},
+              "rate_sweep": sweep,
+              "cache": {"cold": cold, "warm": warm}}
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[serving_bench] wrote {out_path}")
+    assert warm["p50_ms"] < cold["p50_ms"], \
+        (f"warm cache should beat cold feature pulls: "
+         f"warm p50 {warm['p50_ms']}ms >= cold p50 {cold['p50_ms']}ms")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(prog="benchmarks.serving_bench")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small scale + shorter trace for CI")
+    args = ap.parse_args()
+    run(scale=args.scale, out_path=args.out, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

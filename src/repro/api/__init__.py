@@ -19,10 +19,12 @@ from ..core.kvstore.faults import (FaultInjector, RPCRetriesExhausted,
 from .dataloader import (EdgeBatch, EdgeDataLoader, NodeBatch,
                          NodeDataLoader)
 from .dist_graph import DistGraph, DistTensor
+from .inference import InferenceServer, PredictionHandle, offline_embeddings
 
 __all__ = [
     "DistGraph", "DistTensor", "DistEmbedding", "SparseAdamConfig",
     "NodeDataLoader", "EdgeDataLoader", "NodeBatch", "EdgeBatch",
+    "InferenceServer", "PredictionHandle", "offline_embeddings",
     "DistGNNTrainer", "TrainJobConfig",
     "FaultInjector", "TransientRPCError", "RPCRetriesExhausted",
     "TrainerDeath",

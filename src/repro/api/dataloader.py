@@ -41,7 +41,8 @@ from typing import Iterator, List, Optional
 import numpy as np
 
 from ..core.pipeline.minibatch import EdgeMinibatchPipeline, MinibatchPipeline
-from ..core.sampler import DistributedSampler, EdgeBatchSampler
+from ..core.sampler import (DistributedSampler, EdgeBatchSampler,
+                            sample_ego_networks)
 from .dist_graph import DistGraph
 
 _MODES = ("train", "eval")
@@ -305,13 +306,15 @@ class NodeDataLoader(_BaseLoader):
         return len(self.nids) // self.batch_size
 
     def _eval_iter(self) -> Iterator[NodeBatch]:
-        bs = self.batch_size
-        for b in range(len(self)):
-            chunk = self.nids[b * bs:(b + 1) * bs]
-            lab = (None if self.labels is None
-                   else self.labels[b * bs:(b + 1) * bs])
-            mb = self.sampler.sample(chunk, labels=lab, batch_index=b)
-            mb.input_feats = self._pull_feats(mb)
+        # the shared ad-hoc protocol (core.sampler.ego): the inference
+        # server runs the SAME function, which is what makes the serving
+        # oracle contract (DESIGN.md §11) structural rather than tested-by
+        # -coincidence
+        for mb in sample_ego_networks(self.sampler, self._client,
+                                      self.g.feat_name, self.nids,
+                                      labels=self.labels,
+                                      typed=self.g.typed if self.g.hetero
+                                      else None):
             yield NodeBatch(mb)
 
 

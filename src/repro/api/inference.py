@@ -1,0 +1,383 @@
+"""Online inference service + offline layer-wise embeddings (DESIGN.md §11).
+
+The paper's motivating workloads (recommendation, fraud detection, search)
+are *serving* workloads: a trained GNN answers low-latency predict requests
+for individual vertices, and periodically a batch job materializes
+embeddings for the whole graph. Both reuse the training stack's pieces:
+
+* :class:`InferenceServer` — accepts single-node / small-batch predict
+  requests, samples each request's ego networks through the SAME
+  deterministic ad-hoc protocol the eval loader runs
+  (:func:`~repro.core.sampler.sample_ego_networks`), pulls features
+  through a long-lived halo-prewarmed :class:`FeatureCache`, and
+  micro-batches concurrent requests into ONE statically-shaped stacked
+  block (§2 capacity contract) staged via ``device_stage(packed=True)``
+  so every scheduler tick runs a single jitted forward.
+
+  The serving correctness contract is bitwise: a node's served logits
+  equal the eval-mode loader forward for the same node, and micro-batched
+  concurrent requests return the same bytes as the same requests served
+  one-at-a-time. Both hold by construction: sampling coordinates are a
+  pure function of request content (never of arrival order or co-batched
+  requests), and the forward is ONE fixed compiled program over
+  ``(micro_batch_capacity, ...)`` stacked inputs whose rows are
+  element-wise independent — padding rows and neighbors in other slots
+  cannot perturb a live row's bytes.
+
+* :func:`offline_embeddings` — DGL's layer-wise ``inference()`` idiom:
+  for each layer, pull the previous layer's rows for every chunk's
+  full-neighbor frontier through the KVStore, run EXACTLY the training
+  forward's layer (:func:`~repro.models.gnn.apply_gnn_layer`), and push
+  the chunk's output rows back as a ``DistTensor``. Full neighborhoods
+  ride the §2 static-capacity contract via
+  :func:`~repro.core.sampler.full_neighbor_fanouts` (fanout = max
+  in-degree takes every adjacency list deterministically), so the result
+  is exact — byte-equal to a full-neighbor mini-batch forward per node,
+  invariant to ``chunk_size``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.kvstore.cache import CacheConfig, FeatureCache
+from ..core.sampler import (DistributedSampler, full_neighbor_fanouts,
+                            pull_batch_feats, sample_ego_networks)
+from ..kernels.pack import device_stage
+from ..models.gnn import GNNConfig, apply_gnn, apply_gnn_layer
+from .dataloader import _model_blocks
+from .dist_graph import DistGraph, DistTensor
+
+
+class PredictionHandle:
+    """Future for one predict request: ``result()`` blocks until every
+    chunk of the request has been served and returns the ``(n, C)``
+    logits rows in request order."""
+
+    def __init__(self, num_chunks: int):
+        self._parts: List[Optional[np.ndarray]] = [None] * num_chunks
+        self._remaining = num_chunks
+        self._error: Optional[BaseException] = None
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+        self.submitted_at = time.perf_counter()
+        self.completed_at: Optional[float] = None
+
+    # -- server side ----------------------------------------------------
+    def _deliver(self, chunk: int, rows: np.ndarray) -> None:
+        with self._lock:
+            if self._parts[chunk] is None:
+                self._parts[chunk] = rows
+                self._remaining -= 1
+            if self._remaining == 0:
+                self.completed_at = time.perf_counter()
+                self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        with self._lock:
+            self._error = exc
+            self.completed_at = time.perf_counter()
+            self._event.set()
+
+    # -- client side ----------------------------------------------------
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self._event.wait(timeout):
+            raise TimeoutError("predict request not served within "
+                               f"{timeout}s")
+        if self._error is not None:
+            raise self._error
+        return np.concatenate(self._parts, axis=0)
+
+
+class InferenceServer:
+    """Low-latency ego-network serving over a :class:`DistGraph`.
+
+    ``predict(nids)`` / ``submit(nids)`` chunk a request into §2
+    capacity blocks (``cfg.batch_size`` seeds each), sample every chunk at
+    the deterministic ad-hoc coordinate ``(epoch=-1, batch_index=chunk
+    position within the request)`` — the eval loader's protocol, shared
+    via :func:`sample_ego_networks` — and hand the featurized blocks to a
+    scheduler thread. The scheduler waits up to ``micro_batch_window_ms``
+    to coalesce up to ``micro_batch_capacity`` chunks (across requests)
+    into one stacked host tree, stages it with ``device_stage(packed=
+    True)`` (one device transfer per tick, DESIGN.md §9), and runs ONE
+    jitted vmapped forward; each chunk's live logit rows go back to its
+    request's :class:`PredictionHandle`.
+
+    ``cache`` is either a :class:`CacheConfig` (the server builds its own
+    halo-prewarmed :class:`FeatureCache` via
+    :meth:`DistGraph.feature_cache`) or an existing :class:`FeatureCache`
+    to SHARE — the long-lived cache persists across requests and may be
+    shared with other servers/loaders (it locks internally, and mutable
+    rows are version-checked per lookup, so concurrent
+    ``DistEmbedding.push_grad`` writers can never make it serve stale
+    bytes — DESIGN.md §5).
+    """
+
+    def __init__(self, g: DistGraph, cfg: GNNConfig, params, *,
+                 cache: Union[CacheConfig, FeatureCache, None] = None,
+                 micro_batch_capacity: int = 8,
+                 micro_batch_window_ms: float = 2.0,
+                 sampler_seed: int = 0):
+        if micro_batch_capacity < 1:
+            raise ValueError("micro_batch_capacity must be >= 1")
+        self.g = g
+        self.cfg = cfg
+        self.params = params
+        self.capacity = int(micro_batch_capacity)
+        self.window_s = float(micro_batch_window_ms) / 1e3
+        self.sampler = DistributedSampler(
+            g.book, g.partitions, cfg.fanouts, cfg.batch_size,
+            machine=g.machine, transport=None,   # sampling RPCs uncharged,
+            seed=sampler_seed,                   # like eval (DESIGN.md §11)
+            schema=g.schema if g.hetero else None,
+            ntype_of_node=g.typed.ntype_of_node if g.hetero else None)
+        if isinstance(cache, CacheConfig):
+            cache = g.feature_cache(cache)
+        elif isinstance(cache, FeatureCache):
+            # shared instance: make sure this graph's feature tensors are
+            # registered (idempotent) so pulls take the cached path
+            names = ([f"{g.feat_name}:{nt}" for nt in g.schema.ntypes]
+                     if g.hetero else [g.feat_name])
+            for name in names:
+                cache.register(g.store, name)
+        self.cache = cache
+        self.client = g.new_client()
+        if cache is not None:
+            self.client.attach_cache(cache)
+
+        etype_id = g.schema.etype_id if g.hetero else None
+
+        def fwd(params, stacked):
+            return jax.vmap(
+                lambda b: apply_gnn(cfg, params, b, etype_id=etype_id)
+            )(stacked)
+
+        self._fwd = jax.jit(fwd)
+
+        self._cond = threading.Condition()
+        self._pending: List[tuple] = []    # (handle, chunk_idx, tree, live)
+        self._stop = False
+        self._lock = threading.Lock()      # stats
+        self.requests = 0
+        self.chunks = 0
+        self.ticks = 0
+        self.tick_chunks: List[int] = []
+        self.latencies_s: List[float] = []
+        self._thread = threading.Thread(target=self._loop,
+                                        name="inference-scheduler",
+                                        daemon=True)
+        self._thread.start()
+
+    # -- request path ---------------------------------------------------
+    def submit(self, nids) -> PredictionHandle:
+        """Enqueue a predict request (non-blocking); sampling and feature
+        pulls run in the caller's thread, the forward on the scheduler's.
+        Requests larger than ``cfg.batch_size`` are split into §2 blocks
+        (chunk b at ad-hoc coordinate b, exactly the eval loader's
+        numbering)."""
+        nids = np.asarray(nids, dtype=np.int64).reshape(-1)
+        if len(nids) == 0:
+            raise ValueError("empty predict request")
+        if self._stop:
+            raise RuntimeError("InferenceServer is closed")
+        bs = self.cfg.batch_size
+        handle = PredictionHandle(num_chunks=-(-len(nids) // bs))
+        entries = []
+        for b, mb in enumerate(sample_ego_networks(
+                self.sampler, self.client, self.g.feat_name, nids,
+                typed=self.g.typed if self.g.hetero else None,
+                drop_last=False)):
+            tree = {"input_feats": mb.input_feats,
+                    "blocks": _model_blocks(mb)}
+            entries.append((handle, b, tree, int(mb.seed_mask.sum())))
+        with self._cond:
+            if self._stop:
+                raise RuntimeError("InferenceServer is closed")
+            self._pending.extend(entries)
+            self._cond.notify_all()
+        with self._lock:
+            self.requests += 1
+            self.chunks += len(entries)
+        return handle
+
+    def predict(self, nids, timeout: Optional[float] = 60.0) -> np.ndarray:
+        """Synchronous predict: ``(len(nids), num_classes)`` logits."""
+        return self.submit(nids).result(timeout)
+
+    # -- scheduler ------------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._pending and not self._stop:
+                    self._cond.wait()
+                if not self._pending and self._stop:
+                    return
+                # first chunk arrived: hold the tick open up to the
+                # micro-batch window for co-batchable chunks
+                deadline = time.perf_counter() + self.window_s
+                while len(self._pending) < self.capacity and not self._stop:
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        break
+                    self._cond.wait(timeout=remaining)
+                take = self._pending[:self.capacity]
+                del self._pending[:self.capacity]
+            self._serve_tick(take)
+
+    def _serve_tick(self, take: List[tuple]) -> None:
+        try:
+            trees = [t for (_h, _b, t, _n) in take]
+            # pad to the static stack capacity by repeating the first
+            # chunk: rows are independent, so pad contents never reach a
+            # live chunk's bytes and the program compiles exactly once
+            trees = trees + [trees[0]] * (self.capacity - len(trees))
+            host = jax.tree.map(lambda *xs: np.stack(xs), *trees)
+            staged = device_stage(host, packed=True).unpack()
+            logits = np.asarray(self._fwd(self.params, staged))
+        except BaseException as exc:   # deliver, don't kill the scheduler
+            for handle, _b, _t, _n in take:
+                handle._fail(exc)
+            return
+        with self._lock:
+            self.ticks += 1
+            self.tick_chunks.append(len(take))
+        for i, (handle, b, _tree, n_live) in enumerate(take):
+            handle._deliver(b, logits[i, :n_live])
+            if handle.done() and handle.latency_s is not None:
+                with self._lock:
+                    self.latencies_s.append(handle.latency_s)
+
+    # -- lifecycle / observability --------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            occ = (float(np.mean(self.tick_chunks))
+                   if self.tick_chunks else 0.0)
+            out = {"requests": self.requests, "chunks": self.chunks,
+                   "ticks": self.ticks, "mean_tick_occupancy": occ,
+                   "micro_batch_capacity": self.capacity,
+                   "micro_batch_window_ms": self.window_s * 1e3,
+                   "cache": None}
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
+        return out
+
+    def close(self) -> None:
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        self._thread.join(timeout=30)
+
+    def __enter__(self) -> "InferenceServer":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+# ---------------------------------------------------------------------------
+# offline layer-wise inference (DGL's ``inference()`` idiom)
+# ---------------------------------------------------------------------------
+
+def _layer_out_dim(cfg: GNNConfig, params: dict, layer: int) -> int:
+    p = params["layers"][layer]
+    if cfg.arch == "gat":
+        return int(p["b"].shape[0])
+    return int(p["w_self"].shape[1])
+
+
+def offline_embeddings(g: DistGraph, cfg: GNNConfig, params, *,
+                       chunk_size: Optional[int] = None,
+                       prefix: str = "emb") -> List[DistTensor]:
+    """Full-graph layer-wise inference: materialize every layer's output
+    for EVERY node as KVStore-resident ``DistTensor``s.
+
+    Layer ``l`` makes one pass over all nodes in ``chunk_size`` blocks:
+    each chunk's single-hop FULL-neighbor block is built by the owner-
+    compute sampler (static capacity ``chunk_size * (1 + max_in_degree)``,
+    see :func:`full_neighbor_fanouts`), the layer's inputs are pulled
+    through the KVStore (layer 0: the feature tensors; layer l>0: the
+    previous layer's output tensor — so each frontier pull is charged like
+    any feature pull), and the chunk's rows are pushed back to
+    ``"{prefix}{l}"`` (registered ``mutable=True``: version-tracked, so
+    trainer caches can safely register embedding tensors later). The last
+    tensor holds the model's logits (GAT's shared head applied).
+
+    Exactness: per node the result is byte-equal to a full-neighbor
+    mini-batch forward (the satellite test's oracle) and invariant to
+    ``chunk_size`` — every aggregation sees the same per-dst edge order
+    (adjacency order) regardless of chunking, and XLA's CPU row-wise ops
+    are independent of the number of co-resident rows.
+    """
+    chunk_size = int(cfg.batch_size if chunk_size is None else chunk_size)
+    if chunk_size < 2:
+        # a 1-node chunk shrinks the §2 edge capacity onto XLA's
+        # small-array reduction codepath, which reassociates the masked
+        # segment sum and breaks bitwise chunk-size invariance; every
+        # production block (training, eval, serving) is >= 2 seeds, so
+        # the floor costs nothing and keeps the invariant exact
+        raise ValueError("chunk_size must be >= 2")
+    schema = g.schema if g.hetero else None
+    fanouts = full_neighbor_fanouts(g.partitions, cfg.num_layers,
+                                    schema=schema)
+    client = g.new_client()
+    all_nids = np.arange(g.num_nodes(), dtype=np.int64)
+    etype_id = schema.etype_id if schema is not None else None
+
+    out: List[DistTensor] = []
+    prev_name: Optional[str] = None
+    for l in range(cfg.num_layers):
+        last = l == cfg.num_layers - 1
+        d_out = (cfg.num_classes if last and "head" in params
+                 else _layer_out_dim(cfg, params, l))
+        name = f"{prefix}{l}"
+        g.store.init_data(name, (d_out,), np.float32, "node", mutable=True)
+
+        sampler = DistributedSampler(
+            g.book, g.partitions, [fanouts[l]], chunk_size,
+            machine=g.machine, transport=None, seed=0, schema=schema,
+            ntype_of_node=g.typed.ntype_of_node if g.hetero else None)
+        rel_offs = None
+        if sampler.rel_caps[0] is not None:
+            rel_offs = tuple(int(x) for x in sampler.rel_caps[0])
+
+        def layer_fwd(p, h, block, _l=l, _last=last, _ro=rel_offs):
+            h = apply_gnn_layer(cfg, p, _l, h, block, chunk_size,
+                                rel_offsets=_ro)
+            if _last and "head" in p:
+                h = h @ p["head"]
+            return h
+
+        layer_fwd = jax.jit(layer_fwd)
+        for mb in sample_ego_networks(sampler, client, g.feat_name,
+                                      all_nids, typed=None,
+                                      drop_last=False, pull_feats=False):
+            if l == 0:
+                h_src = pull_batch_feats(client, g.feat_name, mb,
+                                         typed=g.typed if g.hetero
+                                         else None)
+            else:
+                h_src = client.pull(prev_name, mb.input_gids)
+            rows = np.asarray(layer_fwd(params, jnp.asarray(h_src),
+                                        _model_blocks(mb)[0]))
+            n_live = int(mb.seed_mask.sum())
+            client.push(name, mb.seeds[:n_live], rows[:n_live],
+                        reduce="assign")
+        prev_name = name
+        out.append(g.ndata[name])
+    return out

@@ -440,6 +440,17 @@ class FeatureCache:
         return self.insert(name, gids[:k], rows, force=True,
                            versions=pre_versions)
 
+    def reset_stats(self) -> None:
+        """Zero the hit/miss/eviction counters WITHOUT touching cached
+        rows. A long-lived cache is shared across serving requests (and
+        possibly across an eval loader and an `InferenceServer` at once —
+        every public method locks, so concurrent clients are safe); the
+        serving benchmark brackets a measurement window with this to read
+        warm-vs-cold hit rates off one instance instead of rebuilding it."""
+        with self._lock:
+            self.hits = self.misses = self.stale_hits = 0
+            self.evictions = self.rejected = 0
+
     # -- reporting ------------------------------------------------------
     def stats(self) -> dict:
         with self._lock:

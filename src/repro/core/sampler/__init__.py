@@ -2,6 +2,8 @@ from .mfg import (MFGBlock, MiniBatch, capacities, pad_block,
                   pad_typed_block, relation_capacities)
 from .neighbor import sample_local
 from .dispatch import DistributedSampler, SamplerStats
+from .ego import (full_neighbor_fanouts, pull_batch_feats,
+                  sample_ego_networks)
 from .compaction import to_block_device, to_block_reference
 from .edge_batch import (EdgeBatchSampler, EdgeMiniBatch, NegativeSampler,
                          edge_endpoints)
@@ -13,4 +15,5 @@ __all__ = [
     "SamplerStats", "to_block_device", "to_block_reference",
     "EdgeBatchSampler", "EdgeMiniBatch", "NegativeSampler", "edge_endpoints",
     "batch_rng", "batch_seed_sequence",
+    "sample_ego_networks", "pull_batch_feats", "full_neighbor_fanouts",
 ]

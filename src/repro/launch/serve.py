@@ -1,4 +1,6 @@
-"""Serving launcher: batched prefill + decode with the ring-buffer cache.
+"""LM serving launcher: batched prefill + decode with the ring-buffer
+cache. This entry point serves TOKEN models only; GNN ego-network serving
+lives in ``repro.launch.gnn_serve`` (``--task gnn`` here forwards there).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
         --batch 4 --prompt-len 64 --gen 32
@@ -6,6 +8,7 @@
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -13,8 +16,23 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # GNN serving is a different launcher (ego-network sampling + KVStore
+    # feature pulls, not a token cache): forward before the LM-specific
+    # flags below reject the command line
+    for i, a in enumerate(argv):
+        if a == "--task=gnn" or (a == "--task" and
+                                 argv[i + 1:i + 2] == ["gnn"]):
+            from . import gnn_serve
+            skip = 1 if a == "--task=gnn" else 2
+            return gnn_serve.main(argv[:i] + argv[i + skip:])
+    ap = argparse.ArgumentParser(
+        description="LM/VLM/audio token serving (prefill + decode). "
+                    "GNN serving: repro.launch.gnn_serve or --task gnn.")
+    ap.add_argument("--task", choices=["lm", "gnn"], default="lm",
+                    help="lm serves token models here; gnn forwards to "
+                         "repro.launch.gnn_serve")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -22,7 +40,7 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     from ..configs import get_config, smoke_variant
     from ..models.lm import init_params, make_decode_step, make_prefill_step

@@ -1,9 +1,9 @@
-from .models import (GNNConfig, LP_SCORE_FNS, apply_gnn, init_gnn,
+from .models import (GNNConfig, LP_SCORE_FNS, apply_gnn, apply_gnn_layer, init_gnn,
                      init_lp_head, lp_loss, lp_loss_from_scores, lp_metrics,
                      lp_pair_scores, lp_ranks, nc_accuracy, nc_loss)
 from .layers import gat_layer, rgcn_layer, sage_layer
 
-__all__ = ["GNNConfig", "LP_SCORE_FNS", "apply_gnn", "init_gnn",
+__all__ = ["GNNConfig", "LP_SCORE_FNS", "apply_gnn", "apply_gnn_layer", "init_gnn",
            "init_lp_head", "lp_loss", "lp_loss_from_scores", "lp_metrics",
            "lp_pair_scores", "lp_ranks", "nc_accuracy", "nc_loss",
            "gat_layer", "rgcn_layer", "sage_layer"]

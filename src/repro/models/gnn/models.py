@@ -110,6 +110,35 @@ def init_gnn(cfg: GNNConfig, rng: jax.Array) -> dict:
     return params
 
 
+def apply_gnn_layer(cfg: GNNConfig, params: dict, layer: int,
+                    h: jnp.ndarray, block: dict, num_dst: int,
+                    rel_offsets=None) -> jnp.ndarray:
+    """One layer of the forward pass: (cap_src, d_in) -> (num_dst, d_out).
+
+    This is the EXACT per-layer computation ``apply_gnn`` runs — the
+    offline layer-wise inference pass (``repro.api.offline_embeddings``,
+    DESIGN.md §11) calls it with full-neighbor blocks of arbitrary dst
+    capacity, which is why ``num_dst``/``rel_offsets`` are arguments
+    rather than derived from ``cfg.batch_size`` here.
+    """
+    p = params["layers"][layer]
+    last = layer == cfg.num_layers - 1
+    act = None if last and cfg.arch != "gat" else (
+        jax.nn.elu if cfg.arch == "gat" else jax.nn.relu)
+    if cfg.arch == "graphsage":
+        return sage_layer(p, h, block, num_dst, activation=act,
+                          impl=cfg.impl)
+    if cfg.arch == "gat":
+        return gat_layer(p, h, block, num_dst,
+                         activation=None if last else jax.nn.elu,
+                         impl=cfg.impl)
+    if cfg.arch == "rgcn":
+        return rgcn_layer(p, h, block, num_dst, cfg.num_rels,
+                          activation=act, impl=cfg.impl,
+                          rel_offsets=rel_offsets)
+    raise ValueError(cfg.arch)
+
+
 def apply_gnn(cfg: GNNConfig, params: dict, batch: dict,
               etype_id=None) -> jnp.ndarray:
     """Forward pass -> (batch_size, num_classes) logits.
@@ -122,21 +151,8 @@ def apply_gnn(cfg: GNNConfig, params: dict, batch: dict,
     rel_offs = cfg.layer_rel_offsets(etype_id) if cfg.typed else (
         [None] * cfg.num_layers)
     for l, block in enumerate(batch["blocks"]):
-        p = params["layers"][l]
-        num_dst = dst_caps[l]
-        last = l == cfg.num_layers - 1
-        act = None if last and cfg.arch != "gat" else (
-            jax.nn.elu if cfg.arch == "gat" else jax.nn.relu)
-        if cfg.arch == "graphsage":
-            h = sage_layer(p, h, block, num_dst, activation=act, impl=cfg.impl)
-        elif cfg.arch == "gat":
-            h = gat_layer(p, h, block, num_dst,
-                          activation=None if last else jax.nn.elu,
-                          impl=cfg.impl)
-        elif cfg.arch == "rgcn":
-            h = rgcn_layer(p, h, block, num_dst, cfg.num_rels,
-                           activation=act, impl=cfg.impl,
-                           rel_offsets=rel_offs[l])
+        h = apply_gnn_layer(cfg, params, l, h, block, dst_caps[l],
+                            rel_offsets=rel_offs[l])
     if "head" in params:
         h = h @ params["head"]
     return h

@@ -9,17 +9,19 @@ ROOT = Path(__file__).resolve().parent.parent
 
 
 def test_readme_documents_every_cli_flag():
-    from repro.launch.train import build_parser
+    from repro.launch.gnn_serve import build_parser as serve_parser
+    from repro.launch.train import build_parser as train_parser
     readme = (ROOT / "README.md").read_text(encoding="utf-8")
     missing = []
-    for action in build_parser()._actions:
-        for opt in action.option_strings:
-            if opt in ("-h", "--help"):
-                continue
-            if f"`{opt}`" not in readme:
-                missing.append(opt)
+    for build_parser in (train_parser, serve_parser):
+        for action in build_parser()._actions:
+            for opt in action.option_strings:
+                if opt in ("-h", "--help"):
+                    continue
+                if f"`{opt}`" not in readme:
+                    missing.append(opt)
     assert not missing, (
-        f"flags missing from README.md's CLI table: {missing} — "
+        f"flags missing from README.md's CLI tables: {missing} — "
         f"document them (tools/check_docs.py covers the rest of the docs)")
 
 

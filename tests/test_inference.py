@@ -1,0 +1,439 @@
+"""Online inference service + offline layer-wise pass (ISSUE 8,
+DESIGN.md §11):
+
+  * serving oracle — ``InferenceServer.predict`` returns byte-identical
+    logits to an eval-mode ``NodeDataLoader`` forward over the same
+    nodes (homogeneous and typed, cache on and off): serving reuses the
+    eval sampling protocol via ``sample_ego_networks``, so this is a
+    structural contract, not a coincidence;
+  * micro-batching — concurrent requests coalesced into one stacked
+    tick return the same bytes as the same requests served
+    one-at-a-time (row independence of the vmapped forward);
+  * offline pass — ``offline_embeddings`` matches a direct
+    full-neighbor mini-batch forward on every node exactly, and its
+    bytes are invariant to the layer-wise chunk size (property test);
+  * robustness — concurrent requests during cache eviction and
+    ``DistEmbedding.push_grad`` version bumps never observe stale rows;
+    transient RPC faults mid-request retry transparently with
+    byte-identical responses.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import (DistGraph, InferenceServer, NodeDataLoader,
+                       offline_embeddings)
+from repro.core.kvstore import (CacheConfig, DistEmbedding, FaultInjector,
+                                FeatureCache)
+from repro.core.sampler import (DistributedSampler, full_neighbor_fanouts,
+                                sample_ego_networks)
+from repro.graph import get_dataset
+from repro.models.gnn import GNNConfig, apply_gnn, init_gnn
+
+FANOUTS_TYPED = {"cites": 5, "writes": 3, "rev_writes": 2, "employs": 2}
+
+
+@pytest.fixture(scope="module")
+def homo_g():
+    ds = get_dataset("product-sim", scale=10)
+    return DistGraph(ds, num_machines=2, trainers_per_machine=1, seed=0)
+
+
+@pytest.fixture(scope="module")
+def hetero_g():
+    ds = get_dataset("mag-hetero", scale=10)
+    return DistGraph(ds, num_machines=2, trainers_per_machine=1,
+                     hetero=True, seed=0)
+
+
+def _cap_in_degree(g, k: int):
+    """Keep at most ``k`` in-edges per node (earliest in edge order).
+
+    mag-hetero's citation hubs reach in-degree in the hundreds, and the
+    full-neighbor §2 capacities MULTIPLY across layers (cap_edge =
+    cap_dst * sum(D_r)) — a two-layer full-neighbor mini-batch oracle
+    over the raw graph would pad to millions of edge slots. Bounding the
+    in-degree keeps that oracle exact AND small; the offline pass itself
+    never needs this (its one-layer blocks scale linearly)."""
+    from repro.graph.csr import CSRGraph
+
+    dst = g.indices
+    order = np.argsort(dst, kind="stable")
+    sd = dst[order]
+    new_run = np.r_[True, sd[1:] != sd[:-1]]
+    run_start = np.maximum.accumulate(
+        np.where(new_run, np.arange(len(sd)), 0))
+    keep = np.zeros(len(dst), dtype=bool)
+    keep[order] = (np.arange(len(sd)) - run_start) < k
+    src = np.repeat(np.arange(g.num_nodes, dtype=np.int64),
+                    np.diff(g.indptr))
+    new_indptr = np.zeros(g.num_nodes + 1, dtype=np.int64)
+    new_indptr[1:] = np.cumsum(np.bincount(src[keep],
+                                           minlength=g.num_nodes))
+    return CSRGraph(indptr=new_indptr, indices=g.indices[keep],
+                    edge_ids=np.arange(int(keep.sum()), dtype=np.int64),
+                    etypes=None if g.etypes is None else g.etypes[keep],
+                    ntypes=g.ntypes, num_etypes=g.num_etypes,
+                    num_ntypes=g.num_ntypes)
+
+
+@pytest.fixture(scope="module")
+def hetero_capped_g():
+    import dataclasses as dc
+    ds = get_dataset("mag-hetero", scale=7)
+    ds = dc.replace(ds, graph=_cap_in_degree(ds.graph, 6))
+    return DistGraph(ds, num_machines=2, trainers_per_machine=1,
+                     hetero=True, seed=0)
+
+
+def _model(g, hetero=False):
+    if hetero:
+        halved = {r: max(1, f // 2) for r, f in FANOUTS_TYPED.items()}
+        cfg = GNNConfig(arch="rgcn", in_dim=g.ds.feats.shape[1],
+                        hidden_dim=8, num_classes=int(g.ds.num_classes),
+                        fanouts=[FANOUTS_TYPED, halved], batch_size=4,
+                        num_rels=g.ds.graph.num_etypes)
+    else:
+        cfg = GNNConfig(arch="graphsage", in_dim=g.ds.feats.shape[1],
+                        hidden_dim=8, num_classes=int(g.ds.num_classes),
+                        fanouts=[3, 2], batch_size=4)
+    return cfg, init_gnn(cfg, jax.random.PRNGKey(0))
+
+
+def _eval_oracle(g, cfg, params, nids, sampler_seed):
+    """Eval-mode loader forward: the serving ground truth."""
+    loader = NodeDataLoader(g, nids, cfg.fanouts,
+                            batch_size=cfg.batch_size, mode="eval",
+                            sampler_seed=sampler_seed)
+    etype_id = g.schema.etype_id if g.hetero else None
+    out = [np.asarray(apply_gnn(cfg, params, nb.model_input(),
+                                etype_id=etype_id))
+           for nb in loader]
+    return np.concatenate(out, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# serving oracle: served bytes == eval-mode forward bytes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cached", [False, True], ids=["nocache", "cache"])
+@pytest.mark.parametrize("kind", ["homo", "hetero"])
+def test_served_matches_eval_loader(kind, cached, homo_g, hetero_g):
+    g = homo_g if kind == "homo" else hetero_g
+    cfg, params = _model(g, hetero=kind == "hetero")
+    nids = g.node_split()[: 3 * cfg.batch_size]
+    oracle = _eval_oracle(g, cfg, params, nids, sampler_seed=7)
+    cache = CacheConfig(budget_bytes=1 << 20) if cached else None
+    with InferenceServer(g, cfg, params, cache=cache,
+                         sampler_seed=7) as srv:
+        served = srv.predict(nids)
+    assert served.shape == oracle.shape
+    assert served.tobytes() == oracle.tobytes()
+
+
+def test_single_node_requests_match_adhoc_protocol(homo_g):
+    """Each 1-node request is chunk 0 of its own trace: byte-identical
+    to running the shared ad-hoc protocol (``sample_ego_networks``, the
+    eval loader's machinery) on just that node and applying the model
+    directly."""
+    g = homo_g
+    cfg, params = _model(g)
+    sampler = DistributedSampler(g.book, g.partitions, cfg.fanouts,
+                                 cfg.batch_size, machine=g.machine,
+                                 transport=None, seed=3)
+    client = g.new_client()
+    with InferenceServer(g, cfg, params, sampler_seed=3) as srv:
+        for nid in g.node_split()[:5]:
+            mb = next(sample_ego_networks(sampler, client, g.feat_name,
+                                          np.array([nid]),
+                                          drop_last=False))
+            blocks = [dict(edge_src=b.edge_src, edge_dst=b.edge_dst,
+                           edge_mask=b.edge_mask, edge_types=b.edge_types)
+                      for b in mb.blocks]
+            oracle = np.asarray(apply_gnn(cfg, params, dict(
+                input_feats=mb.input_feats, blocks=blocks)))
+            assert srv.predict([nid]).tobytes() == oracle[:1].tobytes()
+
+
+def test_shared_cache_instance_and_stats(homo_g):
+    """A pre-built FeatureCache can be shared with a server; stats expose
+    tick occupancy and the cache counters, and reset_stats() zeroes the
+    counters without dropping rows."""
+    g = homo_g
+    cfg, params = _model(g)
+    cache = FeatureCache(CacheConfig(budget_bytes=1 << 20), g.store)
+    nids = g.node_split()[: 2 * cfg.batch_size]
+    oracle = _eval_oracle(g, cfg, params, nids, sampler_seed=0)
+    with InferenceServer(g, cfg, params, cache=cache) as srv:
+        assert srv.cache is cache
+        first = srv.predict(nids)
+        st0 = srv.stats()
+        assert st0["requests"] == 1 and st0["ticks"] >= 1
+        assert st0["cache"]["hits"] + st0["cache"]["misses"] > 0
+        rows0 = st0["cache"]["rows"]
+        cache.reset_stats()
+        st1 = cache.stats()
+        assert st1["hits"] == st1["misses"] == 0
+        assert st1["rows"] == rows0          # rows survived the reset
+        again = srv.predict(nids)
+    assert first.tobytes() == oracle.tobytes() == again.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# micro-batching: concurrent == sequential bytes
+# ---------------------------------------------------------------------------
+
+def test_micro_batched_equals_sequential(homo_g):
+    g = homo_g
+    cfg, params = _model(g)
+    rng = np.random.default_rng(5)
+    requests = [rng.integers(0, g.num_nodes(), size=n)
+                for n in (1, 3, 4, 7, 1, 4, 2, 9)]
+
+    # sequential ground truth: capacity-1 ticks, one request at a time
+    with InferenceServer(g, cfg, params, micro_batch_capacity=1,
+                         sampler_seed=0) as srv:
+        seq = [srv.predict(r) for r in requests]
+
+    # concurrent: N threads race into a wide coalescing window
+    with InferenceServer(g, cfg, params, micro_batch_capacity=8,
+                         micro_batch_window_ms=25.0,
+                         sampler_seed=0) as srv:
+        out = [None] * len(requests)
+
+        def issue(i):
+            out[i] = srv.predict(requests[i])
+
+        threads = [threading.Thread(target=issue, args=(i,))
+                   for i in range(len(requests))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = srv.stats()
+    assert stats["ticks"] <= stats["chunks"]
+    for got, want in zip(out, seq):
+        assert got.tobytes() == want.tobytes()
+
+
+@pytest.mark.slow
+def test_micro_batch_window_coalesces(homo_g):
+    """With pre-staged concurrent submits and a generous window, the
+    scheduler packs multiple chunks per tick (wall-clock sensitive:
+    best-of-2 to ride out scheduler hiccups)."""
+    g = homo_g
+    cfg, params = _model(g)
+    requests = [np.array([i]) for i in range(8)]
+
+    def run() -> int:
+        with InferenceServer(g, cfg, params, micro_batch_capacity=8,
+                             micro_batch_window_ms=200.0) as srv:
+            srv.predict([0])                      # compile first
+            handles = [srv.submit(r) for r in requests]
+            for h in handles:
+                h.result(timeout=60)
+            return srv.ticks - 1                  # minus the warmup tick
+    ticks = min(run() for _ in range(2))
+    assert ticks < len(requests)
+
+
+# ---------------------------------------------------------------------------
+# offline layer-wise pass
+# ---------------------------------------------------------------------------
+
+def _direct_full_neighbor(g, cfg, params, nids, batch_size=4):
+    """Oracle: ordinary mini-batch forward with full-neighbor fanouts."""
+    import dataclasses
+    full = full_neighbor_fanouts(g.partitions, cfg.num_layers,
+                                 schema=g.schema if g.hetero else None)
+    cfg_full = dataclasses.replace(cfg, fanouts=full,
+                                   batch_size=batch_size)
+    return _eval_oracle(g, cfg_full, params, nids, sampler_seed=0)
+
+
+@pytest.mark.parametrize("kind", ["homo", "hetero"])
+def test_offline_embeddings_match_minibatch_forward(kind, homo_g,
+                                                    hetero_capped_g):
+    g = homo_g if kind == "homo" else hetero_capped_g
+    cfg, params = _model(g, hetero=kind == "hetero")
+    embs = offline_embeddings(g, cfg, params, chunk_size=8,
+                              prefix=f"emb_{kind}_")
+    assert len(embs) == cfg.num_layers
+    assert embs[-1].shape == (g.num_nodes(), cfg.num_classes)
+    check = np.arange(16, dtype=np.int64)
+    direct = _direct_full_neighbor(g, cfg, params, check)
+    assert np.array_equal(embs[-1][check], direct)
+
+
+def test_offline_embeddings_cover_every_node(homo_g):
+    """drop_last=False chunking: the ragged tail chunk is still written
+    back, so rows exist for ALL nodes including the last partial chunk."""
+    g = homo_g
+    cfg, params = _model(g)
+    # chunk size that does NOT divide the node count
+    embs = offline_embeddings(g, cfg, params, chunk_size=7,
+                              prefix="emb_tail_")
+    tail = np.arange(g.num_nodes() - 5, g.num_nodes(), dtype=np.int64)
+    direct = _direct_full_neighbor(g, cfg, params,
+                                   np.pad(tail, (0, 3), mode="edge"))
+    assert np.array_equal(embs[-1][tail], direct[: len(tail)])
+
+
+@settings(max_examples=4, deadline=None)
+@given(chunk_size=st.integers(min_value=2, max_value=16))
+def test_offline_chunk_size_invariance(chunk_size):
+    """Embedding bytes are a function of (graph, params) only — never of
+    how the layer-wise pass chunks the node set. (chunk_size=1 is
+    rejected by contract: it would land the segment sum on XLA's
+    small-array codepath, which reassociates floats.)"""
+    w = _small_world()
+    embs = offline_embeddings(w["g"], w["cfg"], w["params"],
+                              chunk_size=chunk_size,
+                              prefix=f"emb_c{chunk_size}_")
+    all_nids = np.arange(w["g"].num_nodes(), dtype=np.int64)
+    got = np.ascontiguousarray(embs[-1][all_nids])
+    assert got.tobytes() == w["baseline"].tobytes()
+
+
+# hypothesis @given cannot take pytest fixtures; a memoized module-level
+# world is built on first use and shared read-only across examples
+_SMALL: dict = {}
+
+
+def _small_world() -> dict:
+    if not _SMALL:
+        ds = get_dataset("product-sim", scale=8)
+        g = DistGraph(ds, num_machines=2, trainers_per_machine=1, seed=0)
+        cfg = GNNConfig(arch="graphsage", in_dim=ds.feats.shape[1],
+                        hidden_dim=8, num_classes=int(ds.num_classes),
+                        fanouts=[3, 2], batch_size=4)
+        params = init_gnn(cfg, jax.random.PRNGKey(0))
+        base = offline_embeddings(g, cfg, params,
+                                  chunk_size=cfg.batch_size,
+                                  prefix="emb_base_")
+        all_nids = np.arange(g.num_nodes(), dtype=np.int64)
+        _SMALL.update(g=g, cfg=cfg, params=params,
+                      baseline=np.ascontiguousarray(base[-1][all_nids]))
+    return _SMALL
+
+
+# ---------------------------------------------------------------------------
+# robustness: eviction + version bumps + transient faults
+# ---------------------------------------------------------------------------
+
+def test_concurrent_serving_never_observes_stale_rows(homo_g):
+    """N reader threads issue predicts through a TINY cache (constant
+    eviction churn) while a writer bumps a mutable embedding tensor
+    registered in the SAME cache: served bytes stay byte-identical to
+    the quiescent oracle, and embedding reads are never torn and never
+    go backwards (version-checked rows, DESIGN.md §5)."""
+    g = homo_g
+    cfg, params = _model(g)
+    emb_dim = 4
+    store = g.store
+    if "serve_emb" not in store.tensor_names():
+        store.init_data("serve_emb", (emb_dim,), np.float32, "node",
+                        mutable=True)
+    writer_client = g.new_client()
+    n_versions = 30
+    ids = np.arange(0, g.num_nodes(), 7, dtype=np.int64)
+
+    # tiny budget => continuous admission/eviction churn under load
+    cache = FeatureCache(CacheConfig(budget_bytes=8192, admit_after=1),
+                         store)
+    cache.register(store, g.feat_name)
+    cache.register(store, "serve_emb")
+
+    rng = np.random.default_rng(11)
+    requests = [rng.integers(0, g.num_nodes(), size=4) for _ in range(12)]
+    with InferenceServer(g, cfg, params, sampler_seed=1) as quiet:
+        oracle = [quiet.predict(r) for r in requests]
+
+    errors = []
+
+    def writer():
+        v = np.zeros((len(ids), emb_dim), np.float32)
+        for version in range(1, n_versions + 1):
+            v[:] = version
+            writer_client.push("serve_emb", ids, v, reduce="assign")
+
+    def reader(idx):
+        try:
+            client = g.new_client().attach_cache(cache)
+            last = 0.0
+            with_srv = readers_srv[idx]
+            for rep in range(3):
+                for i, req in enumerate(requests):
+                    got = with_srv.predict(req)
+                    assert got.tobytes() == oracle[i].tobytes()
+                rows = client.pull("serve_emb", ids[:8])
+                # never torn: a row is one version end to end
+                assert (rows == rows[:, :1]).all()
+                # never stale: versions only move forward
+                assert rows.max() >= last
+                last = rows.max()
+        except BaseException as e:       # surfaced after join
+            errors.append(e)
+
+    n_readers = 3
+    readers_srv = [InferenceServer(g, cfg, params, cache=cache,
+                                   sampler_seed=1)
+                   for _ in range(n_readers)]
+    try:
+        threads = [threading.Thread(target=reader, args=(i,))
+                   for i in range(n_readers)]
+        wt = threading.Thread(target=writer)
+        for t in threads + [wt]:
+            t.start()
+        for t in threads + [wt]:
+            t.join()
+    finally:
+        for srv in readers_srv:
+            srv.close()
+    assert not errors, errors[0]
+    # final read sees the final version exactly
+    final = g.new_client().attach_cache(cache).pull("serve_emb", ids[:4])
+    assert (final == n_versions).all()
+
+
+def test_rpc_fault_mid_request_retries_transparently(homo_g):
+    """A transient pull fault injected mid-request is retried inside the
+    KVStore client: the response bytes are identical and the only trace
+    is retry accounting on the transport."""
+    g = homo_g
+    cfg, params = _model(g)
+    nids = g.node_split()[: 2 * cfg.batch_size]
+    with InferenceServer(g, cfg, params, sampler_seed=2) as srv:
+        clean = srv.predict(nids)
+    before = g.transport.stats()["rpc_failures"]
+    g.transport.fault_injector = FaultInjector(
+        seed=13, rpc_failure_rate=0.4, ops=("pull",),
+        max_rpc_failures=6)
+    try:
+        with InferenceServer(g, cfg, params, sampler_seed=2) as srv:
+            faulted = srv.predict(nids)
+    finally:
+        g.transport.fault_injector = None
+    stats = g.transport.stats()
+    assert stats["rpc_failures"] > before       # faults really fired
+    assert stats["rpc_retries"] >= stats["rpc_failures"] - before
+    assert faulted.tobytes() == clean.tobytes()
+
+
+def test_server_lifecycle_and_errors(homo_g):
+    g = homo_g
+    cfg, params = _model(g)
+    srv = InferenceServer(g, cfg, params)
+    with pytest.raises(ValueError):
+        srv.submit([])
+    srv.close()
+    with pytest.raises(RuntimeError):
+        srv.submit([0])
+    with pytest.raises(ValueError):
+        InferenceServer(g, cfg, params, micro_batch_capacity=0)
+    with pytest.raises(ValueError):
+        offline_embeddings(g, cfg, params, chunk_size=1)
