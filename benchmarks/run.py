@@ -19,7 +19,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 BENCHES = ["fig1", "fig2", "fig10", "fig12", "fig13", "fig14", "table2",
-           "sampling", "kernels", "recovery", "serving", "roofline"]
+           "sampling", "kernels", "recovery", "serving", "availability",
+           "roofline"]
 
 
 def bench_roofline():
@@ -66,6 +67,7 @@ def main() -> None:
                     "kernels": "kernels_micro",
                     "recovery": "recovery_bench",
                     "serving": "serving_bench",
+                    "availability": "availability_bench",
                 }[name]
                 __import__(f"benchmarks.{mod}", fromlist=["run"]).run()
         except Exception:

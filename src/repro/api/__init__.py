@@ -14,20 +14,23 @@ Everything a training script needs lives here::
 these façades, so importing it eagerly here would be circular.
 """
 from ..core.kvstore.embedding import DistEmbedding, SparseAdamConfig
-from ..core.kvstore.faults import (FaultInjector, RPCRetriesExhausted,
+from ..core.kvstore.faults import (FaultInjector, OwnerDownWindow,
+                                   OwnerUnavailable, RPCRetriesExhausted,
                                    TrainerDeath, TransientRPCError)
 from .dataloader import (EdgeBatch, EdgeDataLoader, NodeBatch,
                          NodeDataLoader)
 from .dist_graph import DistGraph, DistTensor
-from .inference import InferenceServer, PredictionHandle, offline_embeddings
+from .inference import (DeadlineExceeded, InferenceServer, PredictionHandle,
+                        ServerOverloaded, offline_embeddings)
 
 __all__ = [
     "DistGraph", "DistTensor", "DistEmbedding", "SparseAdamConfig",
     "NodeDataLoader", "EdgeDataLoader", "NodeBatch", "EdgeBatch",
     "InferenceServer", "PredictionHandle", "offline_embeddings",
+    "ServerOverloaded", "DeadlineExceeded",
     "DistGNNTrainer", "TrainJobConfig",
     "FaultInjector", "TransientRPCError", "RPCRetriesExhausted",
-    "TrainerDeath",
+    "TrainerDeath", "OwnerDownWindow", "OwnerUnavailable",
 ]
 
 _LAZY = ("DistGNNTrainer", "TrainJobConfig")

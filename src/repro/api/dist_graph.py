@@ -35,6 +35,7 @@ import numpy as np
 from ..core.kvstore import (CacheConfig, DistKVStore, FeatureCache,
                             KVClient, NetworkModel, PartitionPolicy,
                             Transport, halo_access_counts)
+from ..core.kvstore.store import MAX_RPC_RETRIES
 from ..core.partition import (build_typed_partition, hierarchical_partition,
                               locality_report, split_training_set)
 from ..core.sampler import edge_endpoints
@@ -164,7 +165,9 @@ class DistGraph:
                  trainers_per_machine: int = 2,
                  partition_method: str = "metis", hetero: Optional[bool] = None,
                  seed: int = 0, network: Optional[NetworkModel] = None,
-                 feat_name: str = "feat"):
+                 feat_name: str = "feat", replication: int = 1,
+                 max_rpc_retries: Optional[int] = None,
+                 hedge_ms: Optional[float] = None):
         self.ds = ds
         self.num_machines = num_machines
         self.trainers_per_machine = trainers_per_machine
@@ -198,7 +201,16 @@ class DistGraph:
             self.typed = build_typed_partition(book, self.schema,
                                                ntypes_new, etypes_new)
             policies.update(self.typed.policies())
-        self.store = DistKVStore(policies, transport=self.transport)
+        # availability knobs (DESIGN.md §12): r-way replica placement,
+        # configurable retry budget, optional hedged reads — all defaults
+        # preserve the unreplicated byte-and-accounting behavior exactly
+        self.store = DistKVStore(
+            policies, transport=self.transport,
+            replication=replication,
+            max_rpc_retries=(MAX_RPC_RETRIES if max_rpc_retries is None
+                             else max_rpc_retries),
+            hedge_delay_s=None if hedge_ms is None else hedge_ms * 1e-3,
+            jitter_seed=seed)
         if self.hetero:
             # per-ntype feature tensors over type-local ID spaces
             for t, nt in enumerate(self.schema.ntypes):

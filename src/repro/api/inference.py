@@ -48,16 +48,34 @@ import numpy as np
 from ..core.kvstore.cache import CacheConfig, FeatureCache
 from ..core.sampler import (DistributedSampler, full_neighbor_fanouts,
                             pull_batch_feats, sample_ego_networks)
+from ..core.kvstore.faults import OwnerUnavailable
 from ..kernels.pack import device_stage
 from ..models.gnn import GNNConfig, apply_gnn, apply_gnn_layer
 from .dataloader import _model_blocks
 from .dist_graph import DistGraph, DistTensor
 
 
+class ServerOverloaded(RuntimeError):
+    """Admission control shed this request: the micro-batch queue is past
+    ``max_pending_chunks`` (DESIGN.md §12). The request was NOT enqueued;
+    the caller may retry with backoff."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline budget expired before its chunks reached a
+    scheduler tick; the scheduler shed it instead of serving a stale
+    answer late (DESIGN.md §12)."""
+
+
 class PredictionHandle:
     """Future for one predict request: ``result()`` blocks until every
     chunk of the request has been served and returns the ``(n, C)``
-    logits rows in request order."""
+    logits rows in request order.
+
+    ``degraded`` is True when any feature row behind the answer was
+    salvaged (stale cache / zero-fill) because every copy of its owner
+    was down — the answer is best-effort, not byte-exact (DESIGN.md §12).
+    """
 
     def __init__(self, num_chunks: int):
         self._parts: List[Optional[np.ndarray]] = [None] * num_chunks
@@ -67,10 +85,14 @@ class PredictionHandle:
         self._lock = threading.Lock()
         self.submitted_at = time.perf_counter()
         self.completed_at: Optional[float] = None
+        self.degraded = False
+        self.deadline_at: Optional[float] = None   # absolute perf_counter
 
     # -- server side ----------------------------------------------------
     def _deliver(self, chunk: int, rows: np.ndarray) -> None:
         with self._lock:
+            if self._error is not None:   # already failed (deadline/close):
+                return                    # late rows must not "complete" it
             if self._parts[chunk] is None:
                 self._parts[chunk] = rows
                 self._remaining -= 1
@@ -132,14 +154,27 @@ class InferenceServer:
                  cache: Union[CacheConfig, FeatureCache, None] = None,
                  micro_batch_capacity: int = 8,
                  micro_batch_window_ms: float = 2.0,
-                 sampler_seed: int = 0):
+                 sampler_seed: int = 0,
+                 deadline_ms: Optional[float] = None,
+                 max_pending_chunks: Optional[int] = None):
         if micro_batch_capacity < 1:
             raise ValueError("micro_batch_capacity must be >= 1")
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError("deadline_ms must be positive")
+        if max_pending_chunks is not None and max_pending_chunks < 1:
+            raise ValueError("max_pending_chunks must be >= 1")
         self.g = g
         self.cfg = cfg
         self.params = params
         self.capacity = int(micro_batch_capacity)
         self.window_s = float(micro_batch_window_ms) / 1e3
+        # availability knobs (DESIGN.md §12): a per-request deadline budget
+        # (expired chunks are shed at tick assembly, never served late)
+        # and an admission bound on the pending-chunk queue
+        self.deadline_s = (None if deadline_ms is None
+                           else float(deadline_ms) / 1e3)
+        self.max_pending_chunks = (None if max_pending_chunks is None
+                                   else int(max_pending_chunks))
         self.sampler = DistributedSampler(
             g.book, g.partitions, cfg.fanouts, cfg.batch_size,
             machine=g.machine, transport=None,   # sampling RPCs uncharged,
@@ -178,33 +213,85 @@ class InferenceServer:
         self.ticks = 0
         self.tick_chunks: List[int] = []
         self.latencies_s: List[float] = []
+        self.degraded_requests = 0
+        self.shed_chunks = 0          # deadline-expired at tick assembly
+        self.rejected_requests = 0    # admission control (ServerOverloaded)
+        self.failed_requests = 0      # handles failed during submit pulls
         self._thread = threading.Thread(target=self._loop,
                                         name="inference-scheduler",
                                         daemon=True)
         self._thread.start()
 
     # -- request path ---------------------------------------------------
+    def _pull_feats(self, mb) -> bool:
+        """Featurize one sampled chunk through the degraded-tolerant pull
+        (DESIGN.md §12): rows whose owner has no reachable copy come back
+        stale-cached or zero-filled instead of raising. Returns True when
+        any row was salvaged. Retry exhaustion (the data exists, the
+        network is flaky) still raises — the caller fails only the
+        owning handle."""
+        if self.g.hetero:
+            feats, fresh = self.client.pull_typed_degraded(
+                self.g.feat_name, mb.input_gids, self.g.typed,
+                ntypes=mb.input_ntypes)
+        else:
+            feats, fresh = self.client.pull_degraded(self.g.feat_name,
+                                                     mb.input_gids)
+        mb.input_feats = feats
+        return not bool(fresh.all())
+
     def submit(self, nids) -> PredictionHandle:
         """Enqueue a predict request (non-blocking); sampling and feature
         pulls run in the caller's thread, the forward on the scheduler's.
         Requests larger than ``cfg.batch_size`` are split into §2 blocks
         (chunk b at ad-hoc coordinate b, exactly the eval loader's
-        numbering)."""
+        numbering).
+
+        Raises :class:`ServerOverloaded` when admission control is on and
+        the pending queue cannot take the request's chunks. A pull
+        failure during featurization fails ONLY this request's handle
+        (the error surfaces from ``result()``); rows whose owner is in a
+        sustained outage degrade instead of failing, and the returned
+        handle is flagged ``degraded``."""
         nids = np.asarray(nids, dtype=np.int64).reshape(-1)
         if len(nids) == 0:
             raise ValueError("empty predict request")
         if self._stop:
             raise RuntimeError("InferenceServer is closed")
         bs = self.cfg.batch_size
-        handle = PredictionHandle(num_chunks=-(-len(nids) // bs))
+        num_chunks = -(-len(nids) // bs)
+        if self.max_pending_chunks is not None:
+            with self._cond:
+                room = self.max_pending_chunks - len(self._pending)
+            if num_chunks > room:
+                with self._lock:
+                    self.rejected_requests += 1
+                raise ServerOverloaded(
+                    f"pending queue has room for {max(room, 0)} chunks, "
+                    f"request needs {num_chunks} (max_pending_chunks="
+                    f"{self.max_pending_chunks})")
+        handle = PredictionHandle(num_chunks=num_chunks)
+        if self.deadline_s is not None:
+            handle.deadline_at = handle.submitted_at + self.deadline_s
         entries = []
-        for b, mb in enumerate(sample_ego_networks(
-                self.sampler, self.client, self.g.feat_name, nids,
-                typed=self.g.typed if self.g.hetero else None,
-                drop_last=False)):
-            tree = {"input_feats": mb.input_feats,
-                    "blocks": _model_blocks(mb)}
-            entries.append((handle, b, tree, int(mb.seed_mask.sum())))
+        try:
+            for b, mb in enumerate(sample_ego_networks(
+                    self.sampler, self.client, self.g.feat_name, nids,
+                    typed=self.g.typed if self.g.hetero else None,
+                    drop_last=False, pull_feats=False)):
+                if self._pull_feats(mb):
+                    handle.degraded = True
+                tree = {"input_feats": mb.input_feats,
+                        "blocks": _model_blocks(mb)}
+                entries.append((handle, b, tree, int(mb.seed_mask.sum())))
+        except Exception as exc:
+            # fail THIS handle only — co-batched requests and the
+            # scheduler loop never see the error (DESIGN.md §12)
+            handle._fail(exc)
+            with self._lock:
+                self.requests += 1
+                self.failed_requests += 1
+            return handle
         with self._cond:
             if self._stop:
                 raise RuntimeError("InferenceServer is closed")
@@ -213,6 +300,8 @@ class InferenceServer:
         with self._lock:
             self.requests += 1
             self.chunks += len(entries)
+            if handle.degraded:
+                self.degraded_requests += 1
         return handle
 
     def predict(self, nids, timeout: Optional[float] = 60.0) -> np.ndarray:
@@ -237,7 +326,25 @@ class InferenceServer:
                     self._cond.wait(timeout=remaining)
                 take = self._pending[:self.capacity]
                 del self._pending[:self.capacity]
-            self._serve_tick(take)
+            # shed chunks whose request deadline already expired: serving
+            # them would spend a tick slot on an answer nobody can use,
+            # and under overload that pushes EVERY later request past its
+            # own deadline (DESIGN.md §12)
+            now = time.perf_counter()
+            live = []
+            for entry in take:
+                handle = entry[0]
+                if handle.deadline_at is not None and now > handle.deadline_at:
+                    handle._fail(DeadlineExceeded(
+                        "request shed: deadline budget "
+                        f"{self.deadline_s * 1e3:.1f}ms expired before "
+                        f"its tick"))
+                    with self._lock:
+                        self.shed_chunks += 1
+                else:
+                    live.append(entry)
+            if live:
+                self._serve_tick(live)
 
     def _serve_tick(self, take: List[tuple]) -> None:
         try:
@@ -271,16 +378,37 @@ class InferenceServer:
                    "ticks": self.ticks, "mean_tick_occupancy": occ,
                    "micro_batch_capacity": self.capacity,
                    "micro_batch_window_ms": self.window_s * 1e3,
+                   "deadline_ms": (None if self.deadline_s is None
+                                   else self.deadline_s * 1e3),
+                   "max_pending_chunks": self.max_pending_chunks,
+                   "degraded_requests": self.degraded_requests,
+                   "shed_chunks": self.shed_chunks,
+                   "rejected_requests": self.rejected_requests,
+                   "failed_requests": self.failed_requests,
                    "cache": None}
         if self.cache is not None:
             out["cache"] = self.cache.stats()
         return out
 
     def close(self) -> None:
+        """Stop the scheduler. Chunks still queued are failed (their
+        ``result()`` raises — a silently-hung future is worse than an
+        error), and a scheduler thread that outlives the join timeout is
+        an error, not a shrug: a live thread still owns the device and
+        the handles it took."""
         with self._cond:
             self._stop = True
+            orphaned = self._pending[:]
+            self._pending.clear()
             self._cond.notify_all()
         self._thread.join(timeout=30)
+        exc = RuntimeError("InferenceServer closed before request served")
+        for handle, _b, _t, _n in orphaned:
+            handle._fail(exc)
+        if self._thread.is_alive():
+            raise RuntimeError(
+                "inference-scheduler thread did not stop within 30s of "
+                "close(); it may still hold the device")
 
     def __enter__(self) -> "InferenceServer":
         return self

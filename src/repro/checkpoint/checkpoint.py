@@ -139,6 +139,11 @@ def load_kvstore(store, directory: str) -> None:
                 store.bump_versions(name,
                                     np.arange(pol.total, dtype=np.int64))
         store.invalidate_caches(name)
+    # the loop above rewrote the PRIMARY shards in place; bring every
+    # replica copy back to byte-identity so a post-restore failover read
+    # still returns exactly the restored bytes (no-op at replication=1)
+    if hasattr(store, "sync_replicas"):
+        store.sync_replicas()
 
 
 def save_cache(cache, directory: str) -> None:

@@ -1,14 +1,15 @@
-from .transport import NetworkModel, Transport
+from .transport import NetworkModel, PeerHealth, Transport
 from .store import DistKVStore, KVClient, KVServer, PartitionPolicy
 from .embedding import DistEmbedding, SparseAdamConfig
 from .cache import CacheConfig, FeatureCache, halo_access_counts
-from .faults import (FaultInjector, RPCRetriesExhausted, TrainerDeath,
+from .faults import (FaultInjector, OwnerDownError, OwnerDownWindow,
+                     OwnerUnavailable, RPCRetriesExhausted, TrainerDeath,
                      TransientRPCError)
 
 __all__ = [
-    "NetworkModel", "Transport", "DistKVStore", "KVClient", "KVServer",
-    "PartitionPolicy", "DistEmbedding", "SparseAdamConfig",
+    "NetworkModel", "PeerHealth", "Transport", "DistKVStore", "KVClient",
+    "KVServer", "PartitionPolicy", "DistEmbedding", "SparseAdamConfig",
     "CacheConfig", "FeatureCache", "halo_access_counts",
     "FaultInjector", "TransientRPCError", "RPCRetriesExhausted",
-    "TrainerDeath",
+    "TrainerDeath", "OwnerDownError", "OwnerDownWindow", "OwnerUnavailable",
 ]

@@ -183,6 +183,7 @@ class FeatureCache:
         self.hits = 0
         self.misses = 0
         self.stale_hits = 0         # version-mismatched entries refreshed
+        self.degraded_hits = 0      # stale rows served by lookup_stale
         self.evictions = 0
         self.rejected = 0           # admission-declined inserts
 
@@ -263,6 +264,28 @@ class FeatureCache:
                         tc.freq.clear()
             self.hits += n_hit
             self.misses += len(gids) - n_hit
+            return hit, rows
+
+    def lookup_stale(self, name: str, gids: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """(hit_mask, rows[hits]) with version checks SKIPPED — the
+        degraded-serving salvage path (DESIGN.md §12), used only when
+        every copy of the owner is unreachable. A possibly-stale row beats
+        a zero-filled one: the bytes were valid when cached (bounded
+        staleness — at most the writes since this entry was inserted).
+        Accounted separately (``degraded_hits``) and touches neither the
+        hit/miss counters nor recency/frequency state, so degraded reads
+        never perturb the normal cache policy."""
+        tc = self._tensors[name]
+        gids = np.asarray(gids, dtype=np.int64)
+        with self._lock:
+            slots = np.fromiter((tc.slot_of.get(int(g), -1) for g in gids),
+                                dtype=np.int64, count=len(gids))
+            hit = slots >= 0
+            n_hit = int(hit.sum())
+            rows = tc.rows[slots[hit]].copy() if n_hit else \
+                np.empty((0,) + tc.row_shape, dtype=tc.dtype)
+            self.degraded_hits += n_hit
             return hit, rows
 
     def insert(self, name: str, gids: np.ndarray, rows: np.ndarray,
@@ -449,7 +472,7 @@ class FeatureCache:
         warm-vs-cold hit rates off one instance instead of rebuilding it."""
         with self._lock:
             self.hits = self.misses = self.stale_hits = 0
-            self.evictions = self.rejected = 0
+            self.degraded_hits = self.evictions = self.rejected = 0
 
     # -- reporting ------------------------------------------------------
     def stats(self) -> dict:
@@ -459,6 +482,7 @@ class FeatureCache:
                 "hits": self.hits, "misses": self.misses,
                 "hit_rate": self.hits / max(total, 1),
                 "stale_hits": self.stale_hits,
+                "degraded_hits": self.degraded_hits,
                 "evictions": self.evictions,
                 "rejected": self.rejected,
                 "used_bytes": self.used_bytes,

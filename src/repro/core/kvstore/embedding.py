@@ -99,16 +99,36 @@ class DistEmbedding:
             srv = store.servers[p]
             rows = local[m]
             gm = g[m]
-            # charge the gradient shipment BEFORE the owner applies it —
-            # same ordering as KVClient.push: a transient-fault retry
-            # (client._charge_remote) must never re-run an Adam step
+            # charge the gradient shipment to EVERY copy holder BEFORE the
+            # owner applies it — same ordering as KVClient.push: a
+            # transient-fault retry (client._charge_remote) must never
+            # re-run an Adam step. A holder inside a down window gets its
+            # charge skipped (deferred replica write, DESIGN.md §12); the
+            # update only fails when no copy holder accepted it.
             nbytes = gm.nbytes
-            if p == getattr(client, "machine", p):
-                store.transport.charge_local(nbytes)
-            elif hasattr(client, "_charge_remote"):
-                client._charge_remote(nbytes, op="push")
-            else:
-                store.transport.charge_remote(nbytes, op="push")
+            holders = (store.replicas_of(p) if hasattr(store, "replicas_of")
+                       else (p,))
+            machine = getattr(client, "machine", p)
+            delivered = 0
+            last = None
+            for h in holders:
+                if h == machine:
+                    store.transport.charge_local(nbytes)
+                    delivered += 1
+                elif hasattr(client, "_charge_remote"):
+                    try:
+                        client._charge_remote(nbytes, op="push", dst=h)
+                        delivered += 1
+                    except Exception as e:
+                        if len(holders) == 1:
+                            raise
+                        last = e
+                        store.transport.note_deferred_replica_write()
+                else:
+                    store.transport.charge_remote(nbytes, op="push")
+                    delivered += 1
+            if delivered == 0:
+                raise last
             t = srv.local_view(self.name + "__t")
             mm = srv.local_view(self.name + "__m")
             vv = srv.local_view(self.name + "__v")
@@ -119,6 +139,14 @@ class DistEmbedding:
             sparse_adam_apply(w, mm, vv, rows, gm, t, beta1=cfg.beta1,
                               beta2=cfg.beta2, lr=cfg.lr, eps=cfg.eps,
                               impl=self.impl)
+            # synchronous replication: copy the post-Adam rows (weights AND
+            # optimizer state) to every replica, so a failover read of any
+            # tensor in the family is byte-identical to the primary
+            store.copy_rows_to_replicas(self.name, p, rows)
+            store.copy_rows_to_replicas(self.name + "__m", p, rows)
+            store.copy_rows_to_replicas(self.name + "__v", p, rows)
+            # __t is a per-row step counter with scalar rows
+            store.copy_rows_to_replicas(self.name + "__t", p, rows)
         # AFTER the owners applied the update: bump versions + drop own
         # cached copies (the shared writer protocol)
         client.notify_write(self.name, uniq)

@@ -27,11 +27,25 @@ Two failure families:
 traffic is ``"pull"``/``"push"`` (the retried paths); sampler dispatch
 charges under the default ``"data"`` tag and is only faulted when a test
 asks for it explicitly (the mid-stream pipeline-failure tests do).
+
+A third family (DESIGN.md §12) models a **server dying**, not a blip:
+
+* **sustained owner-down windows** — :class:`OwnerDownWindow` marks one
+  KVStore owner unreachable for a contiguous window, in *call-index*
+  coordinates (the n-th..m-th RPC addressed to that owner) or
+  *epoch:batch* coordinates (the trainer's batch clock, updated through
+  :meth:`FaultInjector.check_death`). Every charge addressed to a down
+  owner raises :class:`OwnerDownError`; the replicated read path fails
+  over to a live replica (byte-identical rows), and when EVERY copy of
+  an owner is unreachable the client surfaces
+  :class:`OwnerUnavailable` — which degraded-mode serving converts into
+  a flagged stale-cache/zero-fill response instead of a failure.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -42,8 +56,69 @@ class TransientRPCError(RuntimeError):
     """A remote call failed but may succeed on retry (network blip)."""
 
 
+class OwnerDownError(TransientRPCError):
+    """A remote call failed because its destination server is inside a
+    sustained down window (DESIGN.md §12). Subclasses
+    :class:`TransientRPCError` so unreplicated retry loops treat it like
+    any failure; the health-routed read path recognizes it and fails
+    over instead of burning the retry budget."""
+
+
 class RPCRetriesExhausted(RuntimeError):
     """A remote call kept failing past the retry budget — fatal."""
+
+
+class OwnerUnavailable(RuntimeError):
+    """EVERY replica of an owner is unreachable (DESIGN.md §12).
+
+    Raised by the replicated read path after failover exhausted all copy
+    holders, or by an unreplicated read whose owner is inside a sustained
+    down window. Training treats it as fatal (no copy of the bytes
+    exists); degraded-mode serving catches it and falls back to stale
+    cached rows / zero-fill with the response flagged ``degraded``.
+    """
+
+
+Coordinate = Union[int, Tuple[int, int]]
+
+
+@dataclasses.dataclass(frozen=True)
+class OwnerDownWindow:
+    """A sustained outage of one KVStore owner (DESIGN.md §12).
+
+    ``owner`` is the partition/machine id whose server is unreachable for
+    ``start <= x < end``, where ``x`` is either
+
+    * ``unit="calls"`` — the per-owner RPC call index (the n-th charge
+      addressed to that owner), so the window is a pure function of call
+      order and needs no trainer wiring; or
+    * ``unit="batch"`` — the trainer's ``(epoch, batch_index)`` clock,
+      compared lexicographically and advanced as a side effect of
+      :meth:`FaultInjector.check_death` (which every injected trainer
+      already calls once per batch).
+    """
+
+    owner: int
+    start: Coordinate
+    end: Coordinate
+    unit: str = "calls"
+
+    def __post_init__(self):
+        if self.unit not in ("calls", "batch"):
+            raise ValueError(f"unit must be 'calls' or 'batch', "
+                             f"got {self.unit!r}")
+        if self.unit == "batch":
+            for name in ("start", "end"):
+                v = getattr(self, name)
+                if not (isinstance(v, tuple) and len(v) == 2):
+                    raise ValueError(f"batch-unit window needs "
+                                     f"(epoch, batch) {name}, got {v!r}")
+        if not (self.start < self.end):  # lexicographic for tuples
+            raise ValueError(f"empty window: start {self.start!r} "
+                             f">= end {self.end!r}")
+
+    def contains(self, x: Coordinate) -> bool:
+        return self.start <= x < self.end
 
 
 class TrainerDeath(RuntimeError):
@@ -74,7 +149,8 @@ class FaultInjector:
                  kill_at: Optional[Tuple[int, int]] = None,
                  rpc_failure_rate: float = 0.0,
                  ops: Sequence[str] = ("pull", "push"),
-                 max_rpc_failures: Optional[int] = None):
+                 max_rpc_failures: Optional[int] = None,
+                 owner_down: Sequence[OwnerDownWindow] = ()):
         if not (0.0 <= rpc_failure_rate <= 1.0):
             raise ValueError(f"rpc_failure_rate must be in [0, 1], "
                              f"got {rpc_failure_rate}")
@@ -86,10 +162,17 @@ class FaultInjector:
         # cap on TOTAL injected RPC faults (None = unlimited): lets a test
         # inject "the first k calls fail" without rate-1.0 starving retries
         self.max_rpc_failures = max_rpc_failures
+        self.owner_down = tuple(owner_down)
         self._lock = threading.Lock()
         self._rpc_calls = 0
         self.rpc_faults_injected = 0
         self.death_fired = False
+        # per-owner RPC call counters for unit="calls" windows
+        self._owner_calls: Dict[int, int] = {}
+        # trainer batch clock for unit="batch" windows, advanced by
+        # check_death; (-1, -1) = before the first batch
+        self._coord: Tuple[int, int] = (-1, -1)
+        self.owner_down_hits = 0
 
     # -- transient RPC faults -------------------------------------------
     def rpc_should_fail(self, op: str = "data") -> bool:
@@ -110,9 +193,41 @@ class FaultInjector:
                 self.rpc_faults_injected += 1
             return fail
 
+    # -- sustained owner-down windows -------------------------------------
+    def owner_is_down(self, owner: int, op: str = "data") -> bool:
+        """True if ``owner`` is inside a down window for this call.
+
+        Counts one per-owner call per invocation (unit="calls" windows are
+        a pure function of per-owner call order); batch-unit windows
+        compare against the clock advanced by :meth:`check_death`.
+        Scoped to ``ops`` like the transient schedule, so sampler dispatch
+        (op="data") is untouched unless a test opts in.
+        """
+        if not self.owner_down or op not in self.ops:
+            return False
+        owner = int(owner)
+        with self._lock:
+            n = self._owner_calls.get(owner, 0)
+            self._owner_calls[owner] = n + 1
+            coord = self._coord
+            down = any(
+                w.owner == owner and w.contains(n if w.unit == "calls"
+                                                else coord)
+                for w in self.owner_down)
+            if down:
+                self.owner_down_hits += 1
+            return down
+
     # -- trainer death ---------------------------------------------------
     def check_death(self, epoch: int, batch_index: int) -> None:
-        """Raise :class:`TrainerDeath` at the scheduled coordinate (once)."""
+        """Raise :class:`TrainerDeath` at the scheduled coordinate (once).
+
+        Also advances the batch clock used by batch-unit owner-down
+        windows — the trainer calls this once per batch whenever an
+        injector is attached, so the clock needs no extra wiring.
+        """
+        with self._lock:
+            self._coord = (int(epoch), int(batch_index))
         if self.kill_at is None or self.death_fired:
             return
         if (int(epoch), int(batch_index)) == self.kill_at:
@@ -124,4 +239,6 @@ class FaultInjector:
             return {"rpc_calls_seen": self._rpc_calls,
                     "rpc_faults_injected": self.rpc_faults_injected,
                     "death_fired": self.death_fired,
-                    "kill_at": self.kill_at}
+                    "kill_at": self.kill_at,
+                    "owner_down_windows": len(self.owner_down),
+                    "owner_down_hits": self.owner_down_hits}

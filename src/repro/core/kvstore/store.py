@@ -7,18 +7,32 @@ policies per node/edge type). ``KVClient`` is what a trainer uses: ``pull``
 gathers rows by global ID (local rows via the shared-memory fast path,
 remote rows through the transport), ``push`` scatters values or gradient
 updates back to the owning servers.
+
+Replication (DESIGN.md §12): with ``replication=r`` every partition's
+shard also lives on its ``r-1`` ring successors. Writes are synchronous —
+every copy holder is charged and every copy array mutated before the
+write returns — so a failover read from any replica is **byte-identical**
+to the primary read, and the store-global version counters stay the
+single invalidation authority no matter which copy served a row. Reads
+are health-routed: the transport's :class:`~.transport.PeerHealth`
+breaker orders candidates available-first, an optional hedge delay races
+a replica against a slow primary, and only when EVERY copy is
+unreachable does the client surface :class:`~.faults.OwnerUnavailable`.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import weakref
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .faults import RPCRetriesExhausted, TransientRPCError
+from .faults import (OwnerDownError, OwnerUnavailable, RPCRetriesExhausted,
+                     TransientRPCError)
 from .transport import Transport
+
+_MASK32 = 0xFFFFFFFF
 
 # transient-RPC retry budget (DESIGN.md §10): 8 attempts with doubling
 # backoff spans ~256x the base latency — a schedule that fails past it is
@@ -62,6 +76,10 @@ class KVServer:
     def __init__(self, part_id: int):
         self.part_id = part_id
         self._data: Dict[str, np.ndarray] = {}
+        # replica shards this server holds FOR OTHER partitions, keyed by
+        # (tensor name, primary part id) — full copies of the primary
+        # shard, kept byte-identical by synchronous writes (DESIGN.md §12)
+        self._replicas: Dict[Tuple[str, int], np.ndarray] = {}
 
     def init_data(self, name: str, shape_suffix: tuple, dtype, policy: PartitionPolicy,
                   init: Optional[Callable[[tuple], np.ndarray]] = None,
@@ -94,6 +112,18 @@ class KVServer:
         else:
             raise ValueError(reduce)
 
+    # -- replica shards held for other partitions (DESIGN.md §12) --------
+    def init_replica(self, name: str, primary_part: int,
+                     rows: np.ndarray) -> None:
+        self._replicas[(name, int(primary_part))] = np.array(rows, copy=True)
+
+    def replica_view(self, name: str, primary_part: int) -> np.ndarray:
+        return self._replicas[(name, int(primary_part))]
+
+    def fetch_replica(self, name: str, primary_part: int,
+                      local_ids: np.ndarray) -> np.ndarray:
+        return self._replicas[(name, int(primary_part))][local_ids]
+
 
 class DistKVStore:
     """The full store: all servers + a per-machine client view.
@@ -104,13 +134,34 @@ class DistKVStore:
     """
 
     def __init__(self, policies: Dict[str, PartitionPolicy],
-                 transport: Optional[Transport] = None):
+                 transport: Optional[Transport] = None,
+                 replication: int = 1,
+                 max_rpc_retries: int = MAX_RPC_RETRIES,
+                 hedge_delay_s: Optional[float] = None,
+                 jitter_seed: int = 0):
         self.policies = dict(policies)
         num_parts = next(iter(self.policies.values())).num_parts
         for pol in self.policies.values():
             assert pol.num_parts == num_parts
         self.servers = [KVServer(p) for p in range(num_parts)]
         self.transport = transport or Transport()
+        if replication < 1:
+            raise ValueError(f"replication must be >= 1, got {replication}")
+        # clamp: r copies need r distinct machines; a 1-machine smoke run
+        # with --replication 2 degrades to r=1 instead of crashing
+        self.replication = min(int(replication), num_parts)
+        if max_rpc_retries < 1:
+            raise ValueError(f"max_rpc_retries must be >= 1, "
+                             f"got {max_rpc_retries}")
+        self.max_rpc_retries = int(max_rpc_retries)
+        self.hedge_delay_s = hedge_delay_s
+        self.jitter_seed = int(jitter_seed)
+        # ring placement: partition p's copies live on machines
+        # p, p+1, ..., p+r-1 (mod k) — every machine holds r shards and
+        # every shard has r holders, no placement table to persist
+        self._replica_map: Tuple[Tuple[int, ...], ...] = tuple(
+            tuple((p + i) % num_parts for i in range(self.replication))
+            for p in range(num_parts))
         self._meta: Dict[str, tuple] = {}   # name -> (policy_name, dtype)
         # per-row version counters for MUTABLE tensors only — the
         # invalidation authority for trainer-side feature caches (in a real
@@ -146,6 +197,53 @@ class DistKVStore:
                 lo, hi = int(pol.offsets[server.part_id]), int(pol.offsets[server.part_id + 1])
                 rows = full_array[lo:hi]
             server.init_data(name, shape_suffix, dtype, pol, init=init, rows=rows)
+        # seed the replica copies from the freshly-initialized primaries
+        if self.replication > 1:
+            for p in range(self.num_parts):
+                src = self.servers[p].local_view(name)
+                for h in self.replicas_of(p)[1:]:
+                    self.servers[h].init_replica(name, p, src)
+
+    # -- replication (DESIGN.md §12) --------------------------------------
+    def replicas_of(self, p: int) -> Tuple[int, ...]:
+        """Copy holders of partition ``p``, primary first."""
+        return self._replica_map[p]
+
+    def apply_update(self, name: str, p: int, local_ids: np.ndarray,
+                     values: np.ndarray, reduce: str = "assign") -> None:
+        """Apply one delivered write to EVERY copy of partition ``p``.
+
+        The primary takes the real reduction; replicas then copy the
+        primary's updated rows, so all copies are byte-identical even for
+        ``sum`` reductions with duplicate ids. Copies of a holder inside a
+        down window are updated too — this models the write-ahead log the
+        holder replays on return; availability is what the down window
+        takes away, not durability (the charge was already skipped and
+        counted as a deferred replica write by the caller)."""
+        self.servers[p].apply(name, local_ids, values, reduce=reduce)
+        self.copy_rows_to_replicas(name, p, local_ids)
+
+    def copy_rows_to_replicas(self, name: str, p: int,
+                              local_ids: np.ndarray) -> None:
+        """Propagate the primary's current bytes for ``local_ids`` to every
+        replica copy of partition ``p`` (no-op at r=1)."""
+        if self.replication == 1:
+            return
+        rows = self.servers[p].local_view(name)[local_ids]
+        for h in self.replicas_of(p)[1:]:
+            self.servers[h].replica_view(name, p)[local_ids] = rows
+
+    def sync_replicas(self) -> None:
+        """Bulk re-copy every primary shard to its replicas — the
+        checkpoint-restore path, which rewrites primaries in place and
+        must bring all copies back to byte-identity."""
+        if self.replication == 1:
+            return
+        for name in self._meta:
+            for p in range(self.num_parts):
+                src = self.servers[p].local_view(name)
+                for h in self.replicas_of(p)[1:]:
+                    self.servers[h].replica_view(name, p)[...] = src
 
     # -- row versioning (cache invalidation authority) ------------------
     def is_mutable(self, name: str) -> bool:
@@ -247,6 +345,20 @@ class KVClient:
         self.store = store
         self.machine = machine
         self.cache = cache          # Optional[FeatureCache], per trainer
+        self.max_rpc_retries = store.max_rpc_retries
+        self.hedge_delay_s = store.hedge_delay_s
+        # partitions with a copy (primary OR replica) on this machine —
+        # served via shared memory; degenerates to {machine} at r=1
+        self._local_parts = frozenset(
+            p for p in range(store.num_parts)
+            if machine in store.replicas_of(p))
+        self._local_parts_arr = np.fromiter(sorted(self._local_parts),
+                                            dtype=np.int32)
+        # backoff-jitter draws are counter-keyed like every other RNG in
+        # the repo (seed, machine, draw index) — deterministic per client,
+        # desynchronized across clients (DESIGN.md §12)
+        self._jitter_lock = threading.Lock()
+        self._jitter_calls = 0
 
     def attach_cache(self, cache) -> "KVClient":
         """Attach a per-trainer hot-vertex cache (see kvstore.cache); only
@@ -254,29 +366,107 @@ class KVClient:
         self.cache = cache
         return self
 
-    def _charge_remote(self, nbytes: int, op: str) -> None:
-        """Charge one remote RPC, absorbing injected transient failures
-        with exponential backoff (DESIGN.md §10).
+    def _jittered(self, delay_s: float) -> float:
+        """Scale one backoff wait by a seeded factor in [0.5, 1.5) so
+        synchronized retry storms desynchronize; affects the simulated
+        clock only, never retry counts or bytes."""
+        with self._jitter_lock:
+            n = self._jitter_calls
+            self._jitter_calls += 1
+        rng = np.random.default_rng(np.random.SeedSequence(
+            (self.store.jitter_seed & _MASK32, self.machine & _MASK32,
+             n & _MASK32)))
+        return delay_s * (0.5 + rng.random())
 
-        Every data-plane RPC this client issues routes through here, and
-        the charge always runs BEFORE the corresponding server mutation
-        (see ``push``) — so a retried call never re-applies a ``sum``
-        reduction, and injected transients change accounting but not one
-        byte of training state."""
+    def _charge_remote(self, nbytes: int, op: str,
+                       dst: Optional[int] = None) -> None:
+        """Charge one remote RPC to a single destination, absorbing
+        injected transient failures with jittered exponential backoff
+        (DESIGN.md §10).
+
+        Every data-plane RPC this client issues routes through here or
+        :meth:`_remote_read`, and the charge always runs BEFORE the
+        corresponding server mutation (see ``push``) — so a retried call
+        never re-applies a ``sum`` reduction, and injected transients
+        change accounting but not one byte of training state."""
         transport = self.store.transport
         delay = transport.model.latency_s
         last: Optional[TransientRPCError] = None
-        for _ in range(MAX_RPC_RETRIES):
+        for _ in range(self.max_rpc_retries):
             try:
-                transport.charge_remote(nbytes, op=op)
+                transport.charge_remote(nbytes, op=op, dst=dst)
                 return
             except TransientRPCError as e:
                 last = e
-                transport.charge_retry_backoff(delay)
+                transport.charge_retry_backoff(self._jittered(delay))
                 delay *= 2
+        if isinstance(last, OwnerDownError):
+            raise OwnerUnavailable(
+                f"server {dst} is inside a sustained outage and partition "
+                f"has no other copy ({op!r} RPC, {nbytes}B)") from last
         raise RPCRetriesExhausted(
-            f"{op!r} RPC ({nbytes}B) failed {MAX_RPC_RETRIES} times — "
+            f"{op!r} RPC ({nbytes}B) failed {self.max_rpc_retries} times — "
             f"treating the peer as dead") from last
+
+    def _remote_read(self, nbytes: int, owner: int, op: str = "pull") -> int:
+        """Charge one read addressed to ``owner``, failing over across its
+        copy holders (DESIGN.md §12). Returns the server id that served it.
+
+        Routing: candidates are the owner's copy holders primary-first,
+        reordered available-first by the transport's health breaker — a
+        known-dead primary costs zero attempts. If a hedge delay is
+        configured, a first round races the candidates: one attempt at the
+        best candidate, and only when that attempt comes back failed (the
+        simulated transport surfaces failure after one round trip — a
+        successful read never hedges) the hedge timer is charged and the
+        next candidate tried, first success winning. After that, the
+        retry budget is split evenly across candidates with jittered
+        doubling backoff. Only when every copy holder is exhausted does
+        the read fail — as :class:`OwnerUnavailable` if the final error
+        was a down window, else :class:`RPCRetriesExhausted`."""
+        store = self.store
+        transport = store.transport
+        cands = store.replicas_of(owner)
+        if len(cands) == 1:
+            self._charge_remote(nbytes, op=op, dst=owner)
+            return owner
+        health = transport.health
+        order = ([c for c in cands if health.available(c)]
+                 + [c for c in cands if not health.available(c)])
+        last: Optional[TransientRPCError] = None
+        if self.hedge_delay_s is not None:
+            for i, c in enumerate(order):
+                try:
+                    transport.charge_remote(nbytes, op=op, dst=c)
+                    if i > 0:
+                        transport.note_hedge_win()
+                    if c != owner:
+                        transport.note_failover()
+                    return c
+                except TransientRPCError as e:
+                    last = e
+                    if i == 0:
+                        transport.charge_hedge_delay(self.hedge_delay_s)
+        budget = max(1, self.max_rpc_retries // len(order))
+        for c in order:
+            delay = transport.model.latency_s
+            for _ in range(budget):
+                try:
+                    transport.charge_remote(nbytes, op=op, dst=c)
+                    if c != owner:
+                        transport.note_failover()
+                    return c
+                except TransientRPCError as e:
+                    last = e
+                    transport.charge_retry_backoff(self._jittered(delay))
+                    delay *= 2
+        if isinstance(last, OwnerDownError):
+            raise OwnerUnavailable(
+                f"all {len(order)} copies of partition {owner} unreachable "
+                f"({op!r} RPC, {nbytes}B)") from last
+        raise RPCRetriesExhausted(
+            f"{op!r} RPC ({nbytes}B) to partition {owner} failed on all "
+            f"{len(order)} copies — treating the owner as dead") from last
 
     def pull(self, name: str, ids: np.ndarray, *,
              _bypass_cache: bool = False) -> np.ndarray:
@@ -296,9 +486,12 @@ class KVClient:
         cache = None if _bypass_cache else self.cache
         if cache is not None and not cache.has(name):
             cache = None
+        # rows with ANY copy on this machine (primary or replica shard)
+        # take the shared-memory path; at r=1 this is parts == machine
+        is_local = np.isin(parts, self._local_parts_arr)
         fetch = np.ones(len(ids), dtype=bool)
         if cache is not None:
-            rem_idx = np.nonzero(parts != self.machine)[0]
+            rem_idx = np.nonzero(~is_local)[0]
             if len(rem_idx):
                 hit, rows = cache.lookup(name, ids[rem_idx])
                 if hit.any():
@@ -315,17 +508,24 @@ class KVClient:
             m = (parts == p) & fetch
             if not m.any():
                 continue
-            rows = store.servers[p].fetch(name, local_ids[m])
-            out[m] = rows
             nbytes = int(m.sum()) * itemrow
-            if p == self.machine:
+            if p in self._local_parts:
+                src = (store.servers[self.machine].local_view(name)
+                       if p == self.machine else
+                       store.servers[self.machine].replica_view(name, p))
+                out[m] = src[local_ids[m]]
                 store.transport.charge_local(nbytes)
-            else:
-                self._charge_remote(nbytes, op="pull")
-                if cache is not None:
-                    cache.insert(name, ids[m], rows,
-                                 versions=None if pre_versions is None
-                                 else pre_versions[m])
+                continue
+            served_by = self._remote_read(nbytes, p, op="pull")
+            rows = (store.servers[p].fetch(name, local_ids[m])
+                    if served_by == p else
+                    store.servers[served_by].fetch_replica(
+                        name, p, local_ids[m]))
+            out[m] = rows
+            if cache is not None:
+                cache.insert(name, ids[m], rows,
+                             versions=None if pre_versions is None
+                             else pre_versions[m])
         return out
 
     def push(self, name: str, ids: np.ndarray, values: np.ndarray,
@@ -337,19 +537,42 @@ class KVClient:
         parts = pol.part_of(ids)
         local_ids = pol.local_of(ids, parts)
         itemrow = values.dtype.itemsize * int(np.prod(values.shape[1:], initial=1))
+        transport = store.transport
         for p in range(store.num_parts):
             m = parts == p
             if not m.any():
                 continue
             nbytes = int(m.sum()) * itemrow
-            # charge (and absorb transient faults) BEFORE the apply: the
-            # owner mutates exactly once per delivered request, so a
-            # retried charge can never double-apply a "sum" reduction
-            if p == self.machine:
-                store.transport.charge_local(nbytes)
-            else:
-                self._charge_remote(nbytes, op="push")
-            store.servers[p].apply(name, local_ids[m], values[m], reduce=reduce)
+            # charge EVERY copy holder (and absorb transient faults)
+            # BEFORE the apply: each copy mutates exactly once per
+            # delivered request, so a retried charge can never
+            # double-apply a "sum" reduction. Synchronous replication:
+            # a holder inside a down window gets its charge skipped and
+            # counted as deferred (its copy is still brought up to date —
+            # the replayed write-ahead log, see apply_update); the write
+            # only fails when NO copy holder accepted it.
+            holders = store.replicas_of(p)
+            delivered = 0
+            last: Optional[Exception] = None
+            for h in holders:
+                if h == self.machine:
+                    transport.charge_local(nbytes)
+                    delivered += 1
+                    continue
+                try:
+                    self._charge_remote(nbytes, op="push", dst=h)
+                    delivered += 1
+                except (OwnerUnavailable, RPCRetriesExhausted) as e:
+                    if len(holders) == 1:
+                        raise
+                    last = e
+                    transport.note_deferred_replica_write()
+            if delivered == 0:
+                raise OwnerUnavailable(
+                    f"push to partition {p} failed on all {len(holders)} "
+                    f"copy holders") from last
+            store.apply_update(name, p, local_ids[m], values[m],
+                               reduce=reduce)
         self.notify_write(name, ids)
 
     def notify_write(self, name: str, ids: np.ndarray) -> None:
@@ -404,3 +627,68 @@ class KVClient:
                 f"{name_prefix}:{typed.schema.ntypes[0]}")
             out = np.empty((0,) + sample.shape[1:], dtype=sample.dtype)
         return out
+
+    # -- degraded-mode reads (DESIGN.md §12) ------------------------------
+    def pull_degraded(self, name: str, ids: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Best-effort gather for serving: rows whose owner has NO
+        reachable copy (:class:`OwnerUnavailable` — a sustained outage,
+        not a blip) come from the stale cache (version checks skipped —
+        bounded staleness, the rows were valid when cached) or zero-fill,
+        instead of raising. Failure is isolated per owner, so one dead
+        owner never poisons rows healthy owners can serve. Plain retry
+        exhaustion still raises — the data exists, the network is just
+        misbehaving, and fabricating bytes would mask it.
+
+        Returns ``(rows, fresh)`` where ``fresh[i]`` is False for every
+        row that was salvaged; training paths must keep using ``pull``,
+        which refuses to fabricate bytes."""
+        store = self.store
+        pol = store.policy_for(name)
+        ids = np.asarray(ids, dtype=np.int64)
+        parts = pol.part_of(ids)
+        sample = store.servers[self.machine].local_view(name)
+        out = np.zeros((len(ids),) + sample.shape[1:], dtype=sample.dtype)
+        fresh = np.ones(len(ids), dtype=bool)
+        for p in np.unique(parts):
+            m = parts == p
+            try:
+                out[m] = self.pull(name, ids[m])
+            except OwnerUnavailable:
+                fresh[m] = False
+                idx = np.nonzero(m)[0]
+                if self.cache is not None and self.cache.has(name):
+                    hit, rows = self.cache.lookup_stale(name, ids[m])
+                    if hit.any():
+                        out[idx[hit]] = rows
+                store.transport.note_degraded(int(m.sum()))
+        return out, fresh
+
+    def pull_typed_degraded(self, name_prefix: str, fused_ids: np.ndarray,
+                            typed, ntypes: Optional[np.ndarray] = None
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+        """Typed counterpart of :meth:`pull_degraded` — per-type routing
+        like :meth:`pull_typed`, salvage masks merged across types."""
+        fused_ids = np.asarray(fused_ids, dtype=np.int64)
+        if ntypes is None:
+            types, tids = typed.nid2typed(fused_ids)
+        else:
+            types = ntypes
+            tids = typed.node_type_local[fused_ids]
+        out: Optional[np.ndarray] = None
+        fresh = np.ones(len(fused_ids), dtype=bool)
+        for t, ntname in enumerate(typed.schema.ntypes):
+            m = types == t
+            if not m.any():
+                continue
+            rows, f = self.pull_degraded(f"{name_prefix}:{ntname}", tids[m])
+            if out is None:
+                out = np.empty((len(fused_ids),) + rows.shape[1:],
+                               dtype=rows.dtype)
+            out[m] = rows
+            fresh[m] = f
+        if out is None:
+            sample = self.store.servers[self.machine].local_view(
+                f"{name_prefix}:{typed.schema.ntypes[0]}")
+            out = np.empty((0,) + sample.shape[1:], dtype=sample.dtype)
+        return out, fresh

@@ -51,6 +51,25 @@ def build_parser() -> argparse.ArgumentParser:
                     help="max chunks stacked into one forward tick")
     ap.add_argument("--cache-budget-mb", type=float, default=4.0,
                     help="serving feature-cache budget (0 disables)")
+    ap.add_argument("--replication", type=int, default=1,
+                    help="KVStore feature-plane replica count — reads "
+                         "fail over byte-identically when an owner is "
+                         "down (DESIGN.md §12)")
+    ap.add_argument("--max-rpc-retries", type=int, default=8,
+                    help="per-destination transient-RPC retry budget "
+                         "before a peer is treated as dead")
+    ap.add_argument("--hedge-ms", type=float, default=None,
+                    help="hedged reads: race a replica after this many ms "
+                         "without a primary response (needs "
+                         "--replication >= 2; default off)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline budget: chunks still "
+                         "queued past it are shed (DeadlineExceeded) "
+                         "instead of served late (default off)")
+    ap.add_argument("--max-pending-chunks", type=int, default=None,
+                    help="admission control: reject requests "
+                         "(ServerOverloaded) once this many chunks are "
+                         "queued (default off)")
     ap.add_argument("--offline", action="store_true",
                     help="run the full-graph layer-wise embedding pass "
                          "(repro.api.offline_embeddings) and exit")
@@ -90,7 +109,10 @@ def _build_world(args):
                    for f in cfg.fanouts]
         cfg = dataclasses.replace(cfg, fanouts=fanouts)
     g = DistGraph(ds, num_machines=args.machines, trainers_per_machine=1,
-                  hetero=args.hetero, seed=args.seed)
+                  hetero=args.hetero, seed=args.seed,
+                  replication=args.replication,
+                  max_rpc_retries=args.max_rpc_retries,
+                  hedge_ms=args.hedge_ms)
     params = init_gnn(cfg, jax.random.PRNGKey(args.seed))
     return g, cfg, params, np
 
@@ -111,7 +133,7 @@ def run_offline(args) -> dict:
 
 
 def run_serving(args) -> dict:
-    from ..api import InferenceServer
+    from ..api import DeadlineExceeded, InferenceServer, ServerOverloaded
     from ..core.kvstore import CacheConfig
     g, cfg, params, np = _build_world(args)
     cache = (CacheConfig.from_mb(args.cache_budget_mb)
@@ -128,21 +150,34 @@ def run_serving(args) -> dict:
             g, cfg, params, cache=cache,
             micro_batch_capacity=args.micro_batch_capacity,
             micro_batch_window_ms=args.micro_batch_window,
-            sampler_seed=args.seed) as srv:
+            sampler_seed=args.seed, deadline_ms=args.deadline_ms,
+            max_pending_chunks=args.max_pending_chunks) as srv:
         # one warmup request compiles the tick program outside the
         # measured window
         srv.predict(nid_trace[0])
         if srv.cache is not None:
             srv.cache.reset_stats()
         handles = []
+        rejected = 0
         t0 = time.perf_counter()
         for i in range(n_req):
             time.sleep(float(gaps[i]))
-            handles.append(srv.submit(nid_trace[i]))
+            try:
+                handles.append(srv.submit(nid_trace[i]))
+            except ServerOverloaded:
+                rejected += 1     # admission control shed the request
+        served, degraded, shed = 0, 0, 0
         for h in handles:
-            h.result(timeout=120)
+            try:
+                h.result(timeout=120)
+                served += 1
+                degraded += int(h.degraded)
+            except DeadlineExceeded:
+                shed += 1
         wall = time.perf_counter() - t0
-        lat = np.sort(np.asarray([h.latency_s for h in handles]))
+        done = [h for h in handles if h.latency_s is not None]
+        lat = (np.sort(np.asarray([h.latency_s for h in done]))
+               if done else np.array([float("nan")]))
         stats = srv.stats()
 
     out = {"mode": "serving", "requests": n_req,
@@ -151,6 +186,8 @@ def run_serving(args) -> dict:
            "p50_ms": round(float(lat[len(lat) // 2]) * 1e3, 3),
            "p99_ms": round(float(lat[min(len(lat) - 1,
                                          int(len(lat) * 0.99))]) * 1e3, 3),
+           "served": served, "degraded": degraded,
+           "shed": shed, "rejected": rejected,
            "mean_tick_occupancy": round(stats["mean_tick_occupancy"], 2),
            "cache": stats["cache"]}
     print(json.dumps(out, indent=2))

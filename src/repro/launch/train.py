@@ -99,6 +99,9 @@ def run_gnn(args):
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_interval=args.checkpoint_interval,
         fault_injector=injector,
+        replication=args.replication,
+        max_rpc_retries=args.max_rpc_retries,
+        hedge_ms=args.hedge_ms,
         network=NetworkModel(sleep=args.simulate_network))
     tr = DistGNNTrainer(ds, cfg, job)
     print(f"[train] {args.arch}/{args.task} on {args.dataset}: "
@@ -281,6 +284,18 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed for the injected failure schedule "
                          "(deterministic chaos)")
+    ap.add_argument("--replication", type=int, default=1,
+                    help="KVStore feature-plane replica count: each "
+                         "partition's shard also lives on its r-1 ring "
+                         "successors; reads fail over byte-identically "
+                         "when the owner is down (DESIGN.md §12)")
+    ap.add_argument("--max-rpc-retries", type=int, default=8,
+                    help="per-destination transient-RPC retry budget "
+                         "before a peer is treated as dead")
+    ap.add_argument("--hedge-ms", type=float, default=None,
+                    help="hedged reads: race a replica after this many ms "
+                         "without a primary response (needs "
+                         "--replication >= 2; default off)")
     ap.add_argument("--smoke", action="store_true",
                     help="LM: reduced same-family config for CPU smoke runs")
     ap.add_argument("--sync", action="store_true",

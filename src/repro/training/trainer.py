@@ -99,6 +99,17 @@ class TrainJobConfig:
     # benchmark inject through here, production leaves it None
     fault_injector: Optional[FaultInjector] = None
     seed: int = 0
+    # ---- availability (DESIGN.md §12) ----------------------------------
+    # r-way replica placement for the KVStore feature plane: reads fail
+    # over to a live replica on sustained owner outages (byte-identical —
+    # writes are synchronous), so training survives a down server with
+    # ZERO restarts. 1 = unreplicated (exactly the pre-§12 behavior).
+    replication: int = 1
+    # per-destination RPC retry budget (was the MAX_RPC_RETRIES constant)
+    max_rpc_retries: int = 8
+    # hedged reads: after this many ms without a primary response, race a
+    # replica and take the first success; None = off
+    hedge_ms: Optional[float] = None
 
 
 class DistGNNTrainer:
@@ -130,7 +141,9 @@ class DistGNNTrainer:
             ds, num_machines=job.num_machines,
             trainers_per_machine=job.trainers_per_machine,
             partition_method=job.partition_method,
-            hetero=model_cfg.typed, seed=job.seed, network=job.network)
+            hetero=model_cfg.typed, seed=job.seed, network=job.network,
+            replication=job.replication,
+            max_rpc_retries=job.max_rpc_retries, hedge_ms=job.hedge_ms)
         self.hp = self.graph.hp
         self.partition_time_s = self.graph.partition_time_s
         self.transport = self.graph.transport

@@ -1,0 +1,592 @@
+"""Availability suite: replicated feature plane, owner failover, hedged
+reads, degraded-mode serving (ISSUE 9, DESIGN.md §12).
+
+The headline contract: with replication r=2, a sustained single-owner
+outage mid-epoch completes training with ZERO trainer restarts and final
+parameters byte-identical to the no-failure run — synchronous replication
+means a failover read returns exactly the primary's bytes, so faults
+change accounting, never training state. The serving contract: when EVERY
+copy of an owner is down, the ``InferenceServer`` keeps answering —
+responses flagged ``degraded`` (stale cache / zero-fill), no unhandled
+exceptions — while retry exhaustion fails only the owning handle.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (DeadlineExceeded, DistGNNTrainer, DistGraph,
+                       FaultInjector, InferenceServer, OwnerDownWindow,
+                       OwnerUnavailable, RPCRetriesExhausted,
+                       ServerOverloaded, TrainJobConfig)
+from repro.core.kvstore import (CacheConfig, DistEmbedding, DistKVStore,
+                                FeatureCache, PartitionPolicy, PeerHealth)
+from repro.graph import get_dataset
+from repro.models.gnn import GNNConfig, init_gnn
+
+FANOUTS_TYPED = {"cites": 4, "writes": 3, "rev_writes": 2, "employs": 2}
+EPOCHS = 2
+FOREVER = 10 ** 9
+
+
+@pytest.fixture(scope="module")
+def homo_ds():
+    return get_dataset("product-sim", scale=10)
+
+
+@pytest.fixture(scope="module")
+def hetero_ds():
+    return get_dataset("mag-hetero", scale=10)
+
+
+def _pol(k=3, per=4):
+    return PartitionPolicy("node", np.arange(k + 1) * per)
+
+
+def _store(k=3, per=4, dim=3, **kw):
+    s = DistKVStore({"node": _pol(k, per)}, **kw)
+    full = np.arange(k * per * dim, dtype=np.float32).reshape(k * per, dim)
+    s.init_data("feat", (dim,), np.float32, "node", full_array=full)
+    return s, full
+
+
+def _down(owner, start=0, end=FOREVER, unit="calls"):
+    return FaultInjector(owner_down=[
+        OwnerDownWindow(owner=owner, start=start, end=end, unit=unit)])
+
+
+def _pbytes(params):
+    return [np.asarray(x).tobytes()
+            for x in jax.tree_util.tree_leaves(params)]
+
+
+# ---------------------------------------------------------------------------
+# PeerHealth circuit breaker
+# ---------------------------------------------------------------------------
+
+def test_peer_health_state_machine():
+    clock = [0.0]
+    h = PeerHealth(lambda: clock[0], failure_threshold=3, open_window_s=1.0)
+    assert h.state(1) == PeerHealth.CLOSED and h.available(1)
+    h.record_failure(1)
+    h.record_failure(1)
+    assert h.state(1) == PeerHealth.CLOSED, "below threshold stays closed"
+    h.record_failure(1)
+    assert h.state(1) == PeerHealth.OPEN and not h.available(1)
+    assert h.state(2) == PeerHealth.CLOSED, "per-peer isolation"
+    clock[0] = 1.5
+    assert h.state(1) == PeerHealth.HALF_OPEN and h.available(1)
+    h.record_failure(1)     # failed probe reopens + restarts cooldown
+    assert h.state(1) == PeerHealth.OPEN
+    clock[0] = 3.0
+    assert h.state(1) == PeerHealth.HALF_OPEN
+    h.record_success(1)     # successful probe closes fully
+    assert h.state(1) == PeerHealth.CLOSED
+    h.record_failure(1)
+    h.record_failure(1)
+    assert h.state(1) == PeerHealth.CLOSED, "success reset the streak"
+    assert h.stats()["breaker_opens"] == 1
+
+
+def test_success_resets_consecutive_failures():
+    h = PeerHealth(lambda: 0.0, failure_threshold=2)
+    for _ in range(5):
+        h.record_failure(3)
+        h.record_success(3)
+    assert h.state(3) == PeerHealth.CLOSED
+
+
+# ---------------------------------------------------------------------------
+# owner-down windows (FaultInjector)
+# ---------------------------------------------------------------------------
+
+def test_calls_unit_window_is_per_owner_call_indexed():
+    inj = FaultInjector(owner_down=[
+        OwnerDownWindow(owner=1, start=2, end=4, unit="calls")])
+    # owner 1: calls 0,1 up; 2,3 down; 4 up again. owner 0 never down.
+    got = [inj.owner_is_down(1, "pull") for _ in range(5)]
+    assert got == [False, False, True, True, False]
+    assert not any(inj.owner_is_down(0, "pull") for _ in range(5))
+    assert inj.stats()["owner_down_hits"] == 2
+
+
+def test_window_is_op_scoped():
+    inj = _down(0)
+    assert not inj.owner_is_down(0, "data"), \
+        "sampler dispatch (op='data') must not be faulted by default"
+    assert inj.owner_is_down(0, "pull")
+
+
+def test_batch_unit_window_follows_check_death_clock():
+    inj = FaultInjector(owner_down=[
+        OwnerDownWindow(owner=0, start=(1, 2), end=(1, 5), unit="batch")])
+    assert not inj.owner_is_down(0, "pull"), "before the first batch"
+    inj.check_death(1, 1)
+    assert not inj.owner_is_down(0, "pull")
+    inj.check_death(1, 2)
+    assert inj.owner_is_down(0, "pull")
+    inj.check_death(1, 4)
+    assert inj.owner_is_down(0, "pull")
+    inj.check_death(1, 5)
+    assert not inj.owner_is_down(0, "pull"), "end is exclusive"
+    inj.check_death(2, 0)
+    assert not inj.owner_is_down(0, "pull")
+
+
+def test_window_validation():
+    with pytest.raises(ValueError):
+        OwnerDownWindow(owner=0, start=5, end=5)
+    with pytest.raises(ValueError):
+        OwnerDownWindow(owner=0, start=3, end=9, unit="batch")
+    with pytest.raises(ValueError):
+        OwnerDownWindow(owner=0, start=0, end=9, unit="steps")
+
+
+# ---------------------------------------------------------------------------
+# replica placement + synchronous writes
+# ---------------------------------------------------------------------------
+
+def test_ring_placement_and_local_replica_reads():
+    s, full = _store(k=3, replication=2)
+    assert s.replicas_of(0) == (0, 1)
+    assert s.replicas_of(2) == (2, 0)
+    c = s.client(0)
+    assert sorted(c._local_parts) == [0, 2]
+    out = c.pull("feat", np.arange(12))
+    assert np.array_equal(out, full)
+    st = s.transport.stats()
+    # parts 0 and 2 are shared memory (8 rows), only part 1 is remote
+    assert st["remote_requests"] == 1
+    assert st["local_bytes"] == 8 * 12 and st["remote_bytes"] == 4 * 12
+
+
+def test_replication_clamped_to_num_parts():
+    s, _ = _store(k=2, replication=5)
+    assert s.replication == 2
+
+
+def test_push_updates_every_copy_byte_identically():
+    s, _ = _store(k=3, replication=3)
+    c = s.client(0)
+    ids = np.array([1, 5, 9, 5])        # one row per part + a duplicate
+    vals = np.ones((4, 3), dtype=np.float32)
+    c.push("feat", ids, vals, reduce="sum")
+    for p in range(3):
+        primary = s.servers[p].local_view("feat")
+        for h in s.replicas_of(p)[1:]:
+            rep = s.servers[h].replica_view("feat", p)
+            assert rep.tobytes() == primary.tobytes(), (p, h)
+    # the duplicate id was coalesced by np.add.at on the primary and the
+    # replicas copied the result: row 5 (part 1, local 1) got +2
+    assert np.allclose(s.servers[1].local_view("feat")[1],
+                       np.array([17., 18., 19.]))
+
+
+def test_push_grad_keeps_replica_adam_state_identical():
+    s = DistKVStore({"node": _pol(3, 4)}, replication=2)
+    emb = DistEmbedding(s, "emb", num=12, dim=4, policy_name="node", seed=3)
+    c = s.client(0)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        ids = rng.integers(0, 12, size=6)
+        emb.push_grad(c, ids, rng.standard_normal((6, 4)).astype(np.float32))
+    for suffix in ("", "__m", "__v", "__t"):
+        name = "emb" + suffix
+        for p in range(3):
+            primary = s.servers[p].local_view(name)
+            for h in s.replicas_of(p)[1:]:
+                rep = s.servers[h].replica_view(name, p)
+                assert rep.tobytes() == primary.tobytes(), (name, p, h)
+
+
+def test_checkpoint_restore_resyncs_replicas(tmp_path):
+    from repro.checkpoint import load_kvstore, save_kvstore
+
+    s, _ = _store(k=3, replication=2)
+    s.client(0).push("feat", np.array([5]),
+                     np.full((1, 3), 7, np.float32), reduce="assign")
+    save_kvstore(s, str(tmp_path))
+
+    s2, _ = _store(k=3, replication=2)
+    load_kvstore(s2, str(tmp_path))
+    for p in range(3):
+        primary = s2.servers[p].local_view("feat")
+        for h in s2.replicas_of(p)[1:]:
+            assert s2.servers[h].replica_view("feat", p).tobytes() \
+                == primary.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# health-routed failover reads
+# ---------------------------------------------------------------------------
+
+def test_failover_read_is_byte_identical_and_cheap():
+    s, full = _store(k=3, replication=2)
+    s.transport.fault_injector = _down(1)
+    c = s.client(0)     # part 1 is remote; its replica lives on server 2
+    out = c.pull("feat", np.arange(12))
+    assert np.array_equal(out, full), "failover read must be byte-exact"
+    st = s.transport.stats()
+    assert st["failovers"] == 1
+    # the split retry budget caps the burn at max_rpc_retries // 2
+    # attempts on the dead primary — not all 8
+    assert st["owner_down_failures"] <= 4
+    assert st["breaker_opens"] == 1
+    # second pull: the open breaker routes to the replica FIRST — the
+    # dead primary costs zero additional attempts
+    before = st["owner_down_failures"]
+    out2 = c.pull("feat", np.arange(12))
+    assert np.array_equal(out2, full)
+    st2 = s.transport.stats()
+    assert st2["owner_down_failures"] == before, \
+        "open breaker must not re-probe the dead primary immediately"
+    assert st2["failovers"] == 2
+
+
+def test_all_copies_down_raises_owner_unavailable():
+    s, _ = _store(k=3, replication=2)
+    s.transport.fault_injector = FaultInjector(owner_down=[
+        OwnerDownWindow(owner=1, start=0, end=FOREVER),
+        OwnerDownWindow(owner=2, start=0, end=FOREVER)])
+    c = s.client(0)
+    with pytest.raises(OwnerUnavailable):
+        c.pull("feat", np.array([5]))
+
+
+def test_unreplicated_transient_exhaustion_still_rpc_retries_exhausted():
+    # r=1 + plain transient storms keep the PR-7 contract: the error type
+    # says "flaky network", not "owner gone"
+    s, _ = _store(k=3, replication=1)
+    s.transport.fault_injector = FaultInjector(seed=0, rpc_failure_rate=1.0)
+    with pytest.raises(RPCRetriesExhausted):
+        s.client(0).pull("feat", np.array([5]))
+
+
+def test_unreplicated_owner_down_raises_owner_unavailable():
+    s, _ = _store(k=3, replication=1)
+    s.transport.fault_injector = _down(1)
+    with pytest.raises(OwnerUnavailable):
+        s.client(0).pull("feat", np.array([5]))
+
+
+def test_hedged_read_wins_on_down_primary():
+    s, full = _store(k=3, replication=2, hedge_delay_s=0.5e-3)
+    s.transport.fault_injector = _down(1)
+    c = s.client(0)
+    out = c.pull("feat", np.arange(12))
+    assert np.array_equal(out, full)
+    st = s.transport.stats()
+    assert st["hedged_reads"] == 1 and st["hedge_wins"] == 1
+    assert st["failovers"] == 1
+    # exactly one failed primary attempt before the hedge fired — the
+    # hedge path never enters the backoff rounds
+    assert st["owner_down_failures"] == 1 and st["rpc_retries"] == 0
+
+
+def test_hedge_never_fires_on_healthy_primary():
+    s, full = _store(k=3, replication=2, hedge_delay_s=0.5e-3)
+    c = s.client(0)
+    assert np.array_equal(c.pull("feat", np.arange(12)), full)
+    st = s.transport.stats()
+    assert st["hedged_reads"] == 0 and st["hedge_wins"] == 0
+
+
+def test_deferred_replica_write_keeps_copies_consistent():
+    s, _ = _store(k=3, replication=2)
+    # replica holder of part 1 (server 2) is down for the write; the
+    # primary accepts it, the replica's copy is brought up to date via
+    # the modeled write-ahead log replay, the charge is deferred
+    s.transport.fault_injector = _down(2, end=20)
+    c = s.client(0)
+    c.push("feat", np.array([5]), np.full((1, 3), 9, np.float32),
+           reduce="assign")
+    st = s.transport.stats()
+    assert st["deferred_replica_writes"] == 1
+    assert np.allclose(s.servers[2].replica_view("feat", 1)[1], 9)
+    # after the window: a failover read of part 1 serves the written bytes
+    s.transport.fault_injector = _down(1)
+    out = c.pull("feat", np.array([5]))
+    assert np.allclose(out, 9)
+    assert s.transport.stats()["failovers"] == 1
+
+
+def test_write_fails_only_when_no_copy_holder_remains():
+    s, _ = _store(k=2, replication=2)   # part 0 held by {0,1}, part 1 too
+    s.transport.fault_injector = FaultInjector(owner_down=[
+        OwnerDownWindow(owner=1, start=0, end=FOREVER)])
+    c = s.client(0)
+    # machine 0 is itself a holder of every part -> writes always land
+    c.push("feat", np.array([1, 5]), np.ones((2, 3), np.float32))
+    assert s.transport.stats()["deferred_replica_writes"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# satellites: configurable retries + seeded backoff jitter
+# ---------------------------------------------------------------------------
+
+def test_max_rpc_retries_configurable():
+    s, _ = _store(k=2, replication=1, max_rpc_retries=3)
+    s.transport.fault_injector = FaultInjector(seed=0, rpc_failure_rate=1.0)
+    with pytest.raises(RPCRetriesExhausted):
+        s.client(0).pull("feat", np.array([5]))
+    st = s.transport.stats()
+    assert st["rpc_failures"] == 3 and st["rpc_retries"] == 3
+
+
+def test_backoff_jitter_is_deterministic_and_desynchronized():
+    def run(seed, machine):
+        s, _ = _store(k=3, replication=1, jitter_seed=seed)
+        s.transport.fault_injector = FaultInjector(
+            seed=1, rpc_failure_rate=0.9, max_rpc_failures=6)
+        c = s.client(machine)
+        c.pull("feat", np.arange(12))
+        return s.transport.stats()
+
+    a, b = run(0, 0), run(0, 0)
+    assert a["simulated_network_s"] == b["simulated_network_s"], \
+        "same seed + same machine => identical jittered backoff schedule"
+    assert a["rpc_retries"] == b["rpc_retries"]
+    c = run(0, 1)
+    d = run(7, 0)
+    # different machine or seed desynchronizes the waits (retry counts
+    # and bytes are schedule-determined, only the clock moves)
+    assert c["simulated_network_s"] != a["simulated_network_s"]
+    assert d["simulated_network_s"] != a["simulated_network_s"]
+
+
+def test_trainjobconfig_threads_availability_knobs(homo_ds):
+    job = TrainJobConfig(num_machines=3, trainers_per_machine=1,
+                         replication=2, max_rpc_retries=5, hedge_ms=0.5,
+                         seed=5)
+    cfg = GNNConfig(arch="graphsage", in_dim=homo_ds.feats.shape[1],
+                    hidden_dim=16, num_classes=homo_ds.num_classes,
+                    fanouts=[3, 2], batch_size=8)
+    tr = DistGNNTrainer(homo_ds, cfg, job)
+    assert tr.store.replication == 2
+    assert tr.store.max_rpc_retries == 5
+    assert tr.store.hedge_delay_s == pytest.approx(0.5e-3)
+    tr.stop()
+
+
+# ---------------------------------------------------------------------------
+# the headline: sustained owner outage mid-epoch, r=2, zero restarts,
+# byte-identical final parameters (nc + lp, homo + typed, cache ON)
+# ---------------------------------------------------------------------------
+
+def _cfg(ds, task, typed):
+    out = 16 if task == "link_prediction" else ds.num_classes
+    if typed:
+        return GNNConfig(arch="rgcn", in_dim=ds.feats.shape[1],
+                         hidden_dim=16, num_classes=out,
+                         fanouts=[dict(FANOUTS_TYPED)] * 2, batch_size=8,
+                         num_rels=ds.schema.num_etypes)
+    return GNNConfig(arch="graphsage", in_dim=ds.feats.shape[1],
+                     hidden_dim=16, num_classes=out, fanouts=[3, 2],
+                     batch_size=8)
+
+
+def _job(task, **kw):
+    # 3 machines so an r=2 outage still leaves REMOTE failover reads
+    # (with k=2, r=2 every shard is local everywhere); cache ON so the
+    # failover path runs under version-checked cache admission — but
+    # SMALL, so evictions keep remote misses flowing during the outage
+    # window (a cache big enough to hold every remote row would absorb
+    # the whole epoch and the outage would never be exercised)
+    return TrainJobConfig(num_machines=3, trainers_per_machine=1,
+                          task=task, num_negs=4, seed=5,
+                          cache=CacheConfig(budget_bytes=4096), **kw)
+
+
+@pytest.mark.parametrize("task,typed", [
+    ("node_classification", False),
+    ("node_classification", True),
+    ("link_prediction", False),
+    ("link_prediction", True),
+], ids=["nc-homo", "nc-typed", "lp-homo", "lp-typed"])
+def test_owner_outage_trains_through_byte_identical(task, typed, homo_ds,
+                                                    hetero_ds):
+    ds = hetero_ds if typed else homo_ds
+    cfg = _cfg(ds, task, typed)
+
+    # no-failure reference (unreplicated: replication must be
+    # byte-transparent, so r=1 clean == r=2 faulted)
+    base = DistGNNTrainer(ds, cfg, _job(task))
+    assert base.batches_per_epoch >= 4, "world too small for a mid-window"
+    for e in range(EPOCHS):
+        base.train_epoch(e)
+    base_params = _pbytes(base.params)
+    base.stop()
+
+    # r=2 run with owner 2 DOWN from mid-last-epoch onward (batch clock)
+    inj = FaultInjector(seed=11, owner_down=[OwnerDownWindow(
+        owner=2, start=(EPOCHS - 1, 2), end=(EPOCHS, 0), unit="batch")])
+    tr = DistGNNTrainer(ds, cfg, _job(task, replication=2,
+                                      fault_injector=inj))
+    for e in range(EPOCHS):   # NO TrainerDeath, NO recovery — zero restarts
+        tr.train_epoch(e)
+    assert _pbytes(tr.params) == base_params, \
+        "owner outage under r=2 must not change one byte of training"
+    assert inj.stats()["owner_down_hits"] > 0, "the outage never fired"
+    st = tr.transport.stats()
+    assert st["owner_down_failures"] > 0
+    assert st["failovers"] > 0 or st["deferred_replica_writes"] > 0
+    tr.stop()
+
+
+# ---------------------------------------------------------------------------
+# degraded-mode serving
+# ---------------------------------------------------------------------------
+
+def _world(replication=1):
+    ds = get_dataset("product-sim", scale=10)
+    g = DistGraph(ds, num_machines=2, trainers_per_machine=1, seed=0,
+                  replication=replication)
+    cfg = GNNConfig(arch="graphsage", in_dim=ds.feats.shape[1],
+                    hidden_dim=8, num_classes=int(ds.num_classes),
+                    fanouts=[3, 2], batch_size=4)
+    return g, cfg, init_gnn(cfg, jax.random.PRNGKey(0))
+
+
+def _part1_nids(g, n):
+    lo, hi = int(g.book.node_offsets[1]), int(g.book.node_offsets[2])
+    return np.arange(lo, lo + min(n, hi - lo), dtype=np.int64)
+
+
+def test_degraded_serving_when_all_copies_down():
+    g, cfg, params = _world()
+    with InferenceServer(g, cfg, params,
+                         cache=CacheConfig(budget_bytes=1 << 20,
+                                           prewarm=False)) as srv:
+        g.transport.fault_injector = _down(1)   # owner 1, r=1: no copy left
+        down = srv.submit(_part1_nids(g, cfg.batch_size))
+        up = srv.submit(np.arange(cfg.batch_size, dtype=np.int64))
+        rows = down.result(timeout=60)       # no exception: zero-fill rows
+        assert rows.shape == (cfg.batch_size, cfg.num_classes)
+        assert np.isfinite(rows).all()
+        assert down.degraded, "salvaged answer must be flagged"
+        out = up.result(timeout=60)          # part-0 seeds still served
+        assert np.isfinite(out).all()        # (frontier may cross -> flag ok)
+        st = srv.stats()
+        assert st["degraded_requests"] >= 1 and st["failed_requests"] == 0
+        assert g.transport.stats()["degraded_pulls"] > 0
+
+
+def test_warm_cache_masks_full_outage_byte_identically():
+    # every remote row of the request was cached by a healthy serve and
+    # feature tensors are immutable, so the outage is INVISIBLE: same
+    # bytes, not even flagged — the cache is itself a replica tier
+    g, cfg, params = _world()
+    nids = _part1_nids(g, cfg.batch_size)
+    with InferenceServer(g, cfg, params,
+                         cache=CacheConfig(budget_bytes=1 << 20,
+                                           prewarm=False)) as srv:
+        healthy = srv.predict(nids, timeout=60)   # caches part-1 rows
+        g.transport.fault_injector = _down(1)
+        h = srv.submit(nids)
+        assert h.result(timeout=60).tobytes() == healthy.tobytes()
+        assert not h.degraded
+        assert srv.stats()["failed_requests"] == 0
+
+
+def test_pull_degraded_salvages_stale_cache_rows():
+    s, full = _store(k=3, replication=1)
+    c = s.client(0)
+    cache = FeatureCache(CacheConfig(budget_bytes=1 << 20, prewarm=False))
+    cache.register(s, "feat")
+    c.attach_cache(cache)
+    c.pull("feat", np.array([4, 5]))         # warm two part-1 rows
+    s.transport.fault_injector = _down(1)
+    rows, fresh = c.pull_degraded("feat", np.array([4, 5, 6, 0]))
+    # the whole part-1 subset is marked stale (the miss on row 6 is what
+    # surfaced the outage), the healthy owner's row stays fresh
+    assert fresh.tolist() == [False, False, False, True]
+    assert np.array_equal(rows[:2], full[4:6]), "stale-cache salvage"
+    assert np.allclose(rows[2], 0), "uncached row zero-fills"
+    assert np.array_equal(rows[3], full[0]), "healthy owner served fresh"
+    assert cache.stats()["degraded_hits"] == 2
+    assert s.transport.stats()["degraded_pulls"] == 3
+
+
+def test_exhaustion_fails_only_its_handle():
+    g, cfg, params = _world()
+    with InferenceServer(g, cfg, params) as srv:
+        healthy_before = srv.predict(np.arange(cfg.batch_size),
+                                     timeout=60)
+        # transient storm: every pull/push charge fails -> retry
+        # exhaustion during THIS submit's featurization
+        g.transport.fault_injector = FaultInjector(seed=0,
+                                                   rpc_failure_rate=1.0)
+        doomed = srv.submit(_part1_nids(g, cfg.batch_size))
+        with pytest.raises(RPCRetriesExhausted):
+            doomed.result(timeout=60)
+        # the scheduler loop and later requests are unharmed
+        g.transport.fault_injector = None
+        again = srv.predict(np.arange(cfg.batch_size), timeout=60)
+        assert again.tobytes() == healthy_before.tobytes()
+        st = srv.stats()
+        assert st["failed_requests"] == 1
+        assert srv._thread.is_alive()
+
+
+def test_close_fails_pending_handles():
+    g, cfg, params = _world()
+    # a huge coalescing window parks submitted chunks in the queue; close
+    # must fail them, not leave result() hanging forever
+    srv = InferenceServer(g, cfg, params, micro_batch_window_ms=60_000,
+                          micro_batch_capacity=64)
+    warm = srv.submit(np.arange(cfg.batch_size))     # parks in the window
+    h = srv.submit(np.arange(cfg.batch_size))
+    srv.close()
+    for parked in (warm, h):
+        with pytest.raises(RuntimeError, match="closed before"):
+            parked.result(timeout=10)
+    assert not srv._thread.is_alive()
+
+
+def test_close_raises_if_scheduler_thread_survives():
+    g, cfg, params = _world()
+    srv = InferenceServer(g, cfg, params)
+    real = srv._thread
+
+    class _Stuck:
+        def join(self, timeout=None):
+            real.join(timeout)
+
+        def is_alive(self):
+            return True
+
+    srv._thread = _Stuck()
+    with pytest.raises(RuntimeError, match="did not stop"):
+        srv.close()
+    real.join(timeout=10)
+    assert not real.is_alive()
+
+
+def test_admission_control_sheds_overload():
+    g, cfg, params = _world()
+    srv = InferenceServer(g, cfg, params, micro_batch_window_ms=60_000,
+                          micro_batch_capacity=64, max_pending_chunks=2)
+    try:
+        a = srv.submit(np.arange(cfg.batch_size))    # 1 chunk queued
+        b = srv.submit(np.arange(cfg.batch_size))    # 2 chunks queued
+        with pytest.raises(ServerOverloaded):
+            srv.submit(np.arange(cfg.batch_size))
+        assert srv.stats()["rejected_requests"] == 1
+    finally:
+        srv.close()   # fails the two parked chunks, exits cleanly
+    for parked in (a, b):
+        with pytest.raises(RuntimeError, match="closed before"):
+            parked.result(timeout=10)
+
+
+def test_deadline_expired_chunks_are_shed():
+    g, cfg, params = _world()
+    # the 1ms budget expires while the scheduler holds its 100ms
+    # coalescing window open, so the chunk is shed at tick assembly —
+    # never served late
+    with InferenceServer(g, cfg, params, deadline_ms=1.0,
+                         micro_batch_window_ms=100.0) as srv:
+        h = srv.submit(np.arange(cfg.batch_size))
+        with pytest.raises(DeadlineExceeded):
+            h.result(timeout=60)
+        assert srv.stats()["shed_chunks"] == 1
+        assert srv._thread.is_alive(), "shedding must not kill the loop"
